@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> measure.
+
+Three cells (selection criteria in EXPERIMENTS.md §Perf):
+  * qwen1.5-4b  prefill_32k   — worst large-cell roofline fraction (heads
+                                don't divide the model axis -> attention
+                                replicated 16x at baseline)
+  * rwkv6-3b    decode_32k    — the only collective-dominant cell (FSDP
+                                param gathers per decoded token)
+  * deepseek-v2-lite-16b train_4k — most representative of the paper's
+                                technique (MoE token dispatch = work
+                                assignment; capacity = the scheduler knob)
+
+Each iteration re-lowers the cell with one change and re-derives the three
+roofline terms from the compiled HLO. Results append to
+artifacts/perf_iterations.json.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+import roofline  # noqa: E402
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+ITERATIONS = [
+    # (arch, shape, tag, hypothesis, options)
+    ("qwen1.5-4b", "prefill_32k", "ssa",
+     "H: 20 heads % 16 != 0 replicates attention over 'model' (16x redundant "
+     "FLOPs+bytes; measured 6ND/HLO=0.13). Sequence-sharding q over 'model' "
+     "divides attention compute/memory by 16 -> compute ~-45%, memory ~-80%.",
+     dict(seq_shard_attention=True)),
+    ("qwen1.5-4b", "prefill_32k", "ssa_nofsdp",
+     "H: after ssa, per-layer FSDP all-gathers of replicated-head QKV weights "
+     "remain; serving without FSDP (params replicated over 'data') removes "
+     "them -> collective term down, memory slightly down.",
+     dict(seq_shard_attention=True, serve_no_fsdp=True)),
+
+    ("rwkv6-3b", "decode_32k", "nofsdp",
+     "H: decode gathers every layer's FSDP-sharded weights for ONE token "
+     "(all-gather 42MB/step dominates collectives). Replicating params over "
+     "'data' (TP-only, 375MB/chip bf16) removes the gathers -> collective "
+     "term ~-90%, dominant flips to memory.",
+     dict(serve_no_fsdp=True)),
+
+    ("deepseek-v2-lite-16b", "train_4k", "banded",
+     "H: chunked attention computes all (q,kv) block pairs (2x causal FLOPs). "
+     "Banded scan over the T(T+1)/2 lower-triangular pairs halves attention "
+     "FLOPs and score-block HBM traffic.",
+     dict(attn_impl="banded")),
+    ("deepseek-v2-lite-16b", "train_4k", "banded_dots",
+     "H: full remat recomputes the forward in backward (8/6 of 6ND; measured "
+     "ratio 0.57). Saving dot outputs (dots_saveable policy) removes the "
+     "recompute -> HLO FLOPs ~-25%, temp memory UP (trade).",
+     dict(attn_impl="banded", remat_policy="dots")),
+    ("deepseek-v2-lite-16b", "train_4k", "banded_cap10",
+     "H: capacity factor 1.25 pads expert batches by 25%; cf=1.0 cuts expert "
+     "FLOPs/dispatch bytes by 20% at the cost of more dropped tokens under "
+     "load skew (the scheduler trade-off, paper P4 analogue).",
+     dict(attn_impl="banded", moe_capacity=1.0)),
+    ("deepseek-v2-lite-16b", "train_4k", "cap10",
+     "H: banded REGRESSED the memory term (its full-sequence (m,l,acc) scan "
+     "carry is saved per trip by remat backward). cap10 alone should keep "
+     "the compute/ratio win without the attention-carry traffic.",
+     dict(moe_capacity=1.0)),
+    ("deepseek-v2-lite-16b", "prefill_32k", "banded",
+     "H: the banded carry cost is a BACKWARD artifact; at prefill (no grad) "
+     "banded should cut attention FLOPs ~2x and memory with no regression — "
+     "validates the carry-residual theory from the train cell.",
+     dict(attn_impl="banded")),
+    ("qwen2-0.5b", "prefill_32k", "ssa",
+     "H: generalization of the qwen1.5 win — 14 heads % 16 != 0 replicates "
+     "attention; seq-sharding should lift the worst small-cell ratio (0.04).",
+     dict(seq_shard_attention=True)),
+    ("whisper-small", "prefill_32k", "ssa",
+     "H: same fix for whisper's 12 heads (decoder self-attention only; cross "
+     "attention to 1500 frames stays replicated).",
+     dict(seq_shard_attention=True)),
+
+    ("deepseek-v2-lite-16b", "decode_32k", "nofsdp",
+     "H: deepseek decode is collective-bound after the HBM-model fix (79ms) "
+     "— same FSDP-gather pathology as rwkv6; replicating serve params over "
+     "'data' removes it.",
+     dict(serve_no_fsdp=True)),
+]
+
+
+def main(only: str | None = None) -> None:
+    out_p = ART / "perf_iterations.json"
+    results = json.loads(out_p.read_text()) if out_p.exists() else []
+    done = {(r["arch"], r["shape"], r["tag"]) for r in results}
+
+    for arch, shape, tag, hypothesis, opts in ITERATIONS:
+        if only and only != tag:
+            continue
+        if (arch, shape, tag) in done:
+            print(f"[perf] {arch}/{shape}/{tag}: cached")
+            continue
+        cell_id = f"{arch}__{shape}__pod16x16__{tag}"
+        meta_p = ART / "dryrun" / f"{cell_id}.json"
+        if meta_p.exists() and json.loads(meta_p.read_text()).get("status") == "ok":
+            print(f"[perf] {arch}/{shape}/{tag}: reusing artifact", flush=True)
+            res = json.loads(meta_p.read_text())
+        else:
+            print(f"[perf] {arch}/{shape}/{tag}: lowering ...", flush=True)
+            res = run_cell(arch, shape, multi_pod=False, tag=tag, **opts)
+            meta_p.write_text(json.dumps(
+                {k: v for k, v in res.items() if k != "traceback"}, indent=1))
+        if res["status"] != "ok":
+            print(f"[perf]   FAILED: {res.get('error', '')[:300]}")
+            entry = {"arch": arch, "shape": shape, "tag": tag,
+                     "hypothesis": hypothesis, "status": res["status"],
+                     "error": res.get("error")}
+            results.append(entry)
+            out_p.write_text(json.dumps(results, indent=1))
+            continue
+        base = roofline.analyze_cell(arch, shape)
+        var = roofline.analyze_cell(arch, shape, tag=tag)
+        entry = {
+            "arch": arch, "shape": shape, "tag": tag,
+            "hypothesis": hypothesis, "status": "ok",
+            "baseline": {k: base[k] for k in
+                         ("compute_s", "memory_s", "collective_s", "dominant",
+                          "useful_ratio", "roofline_fraction")},
+            "variant": {k: var[k] for k in
+                        ("compute_s", "memory_s", "collective_s", "dominant",
+                         "useful_ratio", "roofline_fraction")},
+            "memory_analysis": res.get("memory_analysis"),
+        }
+        b, v = entry["baseline"], entry["variant"]
+        dom = b["dominant"]
+        delta = (b[f"{dom}_s"] - v[f"{dom}_s"]) / b[f"{dom}_s"] * 100
+        entry["dominant_term_delta_pct"] = delta
+        results.append(entry)
+        out_p.write_text(json.dumps(results, indent=1))
+        print(f"[perf]   {dom} term {b[f'{dom}_s']:.3g} -> {v[f'{dom}_s']:.3g} "
+              f"({delta:+.1f}%)  compute {b['compute_s']:.3g}->{v['compute_s']:.3g}  "
+              f"memory {b['memory_s']:.3g}->{v['memory_s']:.3g}  "
+              f"coll {b['collective_s']:.3g}->{v['collective_s']:.3g}  "
+              f"ratio {b['useful_ratio']:.2f}->{v['useful_ratio']:.2f}  "
+              f"frac {b['roofline_fraction']:.4f}->{v['roofline_fraction']:.4f}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

@@ -1,0 +1,126 @@
+"""Roofline table: three terms per (arch x shape) on the single-pod mesh.
+
+Per cell (from artifacts/dryrun/*.hlo.txt.gz — per-DEVICE post-SPMD HLO):
+
+  compute term    = dot_FLOPs / 197e12        (bf16 MXU peak, v5e-class)
+  memory term     = HBM_bytes / 819e9         (fusion-boundary traffic model)
+  collective term = collective_bytes / 50e9   (per-link ICI; conservative
+                                               single-link model, v5e has 4)
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N_active*B (decode), per
+device; the ratio MODEL_FLOPS/HLO_FLOPs shows how much compiled compute is
+"useful" (remat recompute, masked attention blocks, MoE capacity padding
+all push it below 1).
+
+Notes recorded in EXPERIMENTS.md: (a) XLA cost_analysis counts loop bodies
+once — all numbers here re-derive trip counts from the HLO; (b) the HBM
+model counts fusion-boundary traffic of the CPU-backend module, an upper
+bound for TPU (TPU fuses more; Pallas kernels remove score-block round
+trips entirely).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from hlo_analysis import analyze_file  # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_configs  # noqa: E402
+from repro.models import count_active_params, count_params  # noqa: E402
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link (conservative single-link)
+N_DEV = 256              # single-pod mesh
+
+
+def model_flops_per_device(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = count_params(cfg)
+    n_act = count_active_params(cfg)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * d / N_DEV
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * d / N_DEV
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch / N_DEV
+
+
+def analyze_cell(arch: str, shape_name: str, mesh: str = "pod16x16",
+                 tag: str = "") -> dict | None:
+    cell_id = f"{arch}__{shape_name}__{mesh}" + (f"__{tag}" if tag else "")
+    hlo = ART / "dryrun" / f"{cell_id}.hlo.txt.gz"
+    meta_p = ART / "dryrun" / f"{cell_id}.json"
+    if not hlo.exists() or not meta_p.exists():
+        return None
+    meta = json.loads(meta_p.read_text())
+    if meta.get("status") != "ok":
+        return None
+    c = analyze_file(hlo)
+    t_comp = c.dot_flops / PEAK_FLOPS
+    t_mem = c.hbm_bytes / HBM_BW
+    t_coll = c.collective_total / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(arch, shape_name)
+    bound = max(terms.values())
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh, "tag": tag,
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops": c.dot_flops,
+        "useful_ratio": mf / c.dot_flops if c.dot_flops else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "hbm_bytes": c.hbm_bytes,
+        "coll_bytes": dict(c.coll_bytes),
+        "memory_analysis": meta.get("memory_analysis"),
+    }
+
+
+FIX_HINTS = {
+    "compute": ("banded causal attention (skip masked blocks) and less remat "
+                "recompute move HLO FLOPs toward 6ND"),
+    "memory": ("fuse the attention softmax chain on-chip (Pallas flash kernel "
+               "removes the S^2 score-block HBM round trips)"),
+    "collective": ("keep FSDP gathers pod-local / overlap them with the "
+                   "following layer's compute; int8-compress the gradient "
+                   "all-reduce"),
+}
+
+
+def main(tag: str = "") -> list[dict]:
+    rows = []
+    for arch in list_configs():
+        for shape in SHAPES:
+            r = analyze_cell(arch, shape, tag=tag)
+            if r is not None:
+                rows.append(r)
+    out = ART / (f"roofline{'_' + tag if tag else ''}.json")
+    out.write_text(json.dumps(rows, indent=1))
+
+    lines = ["| arch | shape | compute s | memory s | collective s | dominant "
+             "| 6ND/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    table = "\n".join(lines)
+    (ART / (f"roofline{'_' + tag if tag else ''}.md")).write_text(table + "\n")
+    print(table)
+    return rows
+
+
+if __name__ == "__main__":
+    main(tag=sys.argv[1] if len(sys.argv) > 1 else "")

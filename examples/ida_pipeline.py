@@ -1,0 +1,53 @@
+"""The paper's two IDA pipelines end-to-end, including the distributed
+coordinator (paper Fig. 5) and the device-side DLS kernel path.
+
+    PYTHONPATH=src python examples/ida_pipeline.py
+"""
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Coordinator, CoordinatorConfig, SchedulerConfig
+from repro.kernels import ops, ref
+from repro.vee import connected_components, rmat_graph
+
+# --- shared-memory DaphneSched (paper §3) -----------------------------------
+G = rmat_graph(scale=11, edge_factor=8, seed=3, relabel="blocks")
+cfg = SchedulerConfig(technique="TFSS", queue_layout="PERGROUP",
+                      victim_strategy="RNDPRI", n_workers=4,
+                      numa_domains=(0, 0, 1, 1))
+labels, iters, _ = connected_components(G, cfg)
+print(f"[shared] CC: {len(np.unique(labels))} components in {iters} iters "
+      f"(TFSS/PERGROUP/RNDPRI)")
+
+# --- distributed DaphneSched: coordinator + node instances (paper Fig 5) ----
+co = Coordinator(CoordinatorConfig(n_nodes=3, node_workers=2,
+                                   technique="FAC2", node_technique="GSS"))
+c0 = np.arange(1, G.n_rows + 1, dtype=np.int64)
+co.broadcast("labels", c0)
+co.ship_program(lambda store, start, size:
+                G.row_max_gather(store["labels"], start, start + size))
+t0 = time.perf_counter()
+partials = co.run(G.n_rows)
+print(f"[distributed] one CC step across 3 nodes: {len(partials)} partials "
+      f"in {time.perf_counter() - t0:.2f}s; node failure tolerated "
+      f"(see tests/test_distributed_core.py)")
+
+# --- device path: the DLS-scheduled Pallas kernel (TPU adaptation) ----------
+n = 1024
+Gd = jnp.asarray(G.to_dense()[:n, :n])
+c = jnp.arange(1, n + 1, dtype=jnp.float32)
+for technique in ("STATIC", "MFSC", "GSS"):
+    u = ops.cc_step(Gd, c, technique=technique, tile_r=128, tile_c=256)
+    want = ref.cc_propagate_ref(Gd, c)
+    ok = bool(jnp.all(u == want))
+    print(f"[device] cc_propagate kernel, {technique:6s} schedule: "
+          f"{'exact' if ok else 'MISMATCH'}")
+print("[device] execution order is a scheduler artifact; results identical "
+      "(tests sweep all 11 techniques)")

@@ -1,0 +1,109 @@
+"""End-to-end LM training driver: data pipeline (DaphneSched-scheduled) ->
+sharded train step -> fault-tolerant loop with checkpointing.
+
+Default is a ~25M-param model sized for this 1-core CPU container; pass
+--d-model 768 --layers 12 --steps 300 for the ~100M configuration on real
+hardware (the code path is identical — mesh axes scale via --data/--model).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 20
+"""
+
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import SchedulerConfig
+from repro.data import DataPipeline, SyntheticCorpus
+from repro.launch.mesh import make_host_mesh
+from repro.models import Model, count_params
+from repro.optim import AdamWConfig
+from repro.runtime import (axis_rules, build_train_step, init_train_state,
+                           make_policy)
+from repro.runtime.fault import FaultConfig, run_loop
+from repro.runtime.steps import TrainState
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b",
+                    help="architecture family to scale down")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--d-ff", type=int, default=1024)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data", type=int, default=1, help="mesh data axis")
+    ap.add_argument("--model", type=int, default=1, help="mesh model axis")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    base = get_config(args.arch)
+    cfg = dataclasses.replace(
+        base, n_layers=args.layers, d_model=args.d_model, n_heads=args.heads,
+        n_kv_heads=max(1, args.heads // 4), d_ff=args.d_ff, d_head=0,
+        vocab_size=args.vocab, vocab_pad_multiple=64,
+        moe=None, mla=None, ssm=None, rwkv=None, encdec=None, frontend=None,
+        family="dense", first_layer_dense=False, tie_embeddings=False)
+    model = Model(cfg)
+    print(f"model: {count_params(cfg) / 1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model})")
+
+    mesh = make_host_mesh(args.data, args.model)
+    policy = make_policy(cfg, mesh)
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=max(args.steps, 100),
+                          warmup_steps=min(20, args.steps // 4 + 1),
+                          compress=args.compress_grads)
+
+    # DaphneSched drives batch assembly (DESIGN.md §6.1)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, mean_len=args.seq // 2)
+    pipe = DataPipeline(corpus, args.batch, args.seq,
+                        sched=SchedulerConfig(technique="GSS",
+                                              queue_layout="PERCORE",
+                                              victim_strategy="SEQPRI",
+                                              n_workers=4,
+                                              numa_domains=(0, 0, 1, 1)))
+
+    with axis_rules(mesh, policy.rules()):
+        state = init_train_state(model, jax.random.key(0), opt_cfg)
+        train_step = jax.jit(build_train_step(model, opt_cfg))
+
+        losses = []
+
+        def step_fn(state, batch):
+            batch = {"tokens": jnp.asarray(batch["tokens"])}
+            state, metrics = train_step(state, batch)
+            losses.append(float(metrics["loss"]))
+            return state, metrics
+
+        t0 = time.perf_counter()
+        state, report = run_loop(
+            step_fn, state, pipe.prefetch(args.steps, depth=2),
+            ckpt_dir=args.ckpt_dir,
+            config=FaultConfig(checkpoint_every=max(5, args.steps // 3)),
+            state_restorer=lambda tree: TrainState(**tree),
+        )
+        dt = time.perf_counter() - t0
+
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(f"ran {report.steps_run} steps in {dt:.1f}s ({tok_s:.0f} tok/s, "
+          f"1-core CPU); resumed_from={report.resumed_from}")
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'DECREASED' if losses[-1] < losses[0] else 'flat'})")
+    assert losses[-1] < losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""DaphneSched core: the paper's primary contribution.
+
+Two independent axes (paper §3): work *partitioning* (11 DLS techniques) and
+work *assignment* (centralized self-scheduling, or distributed queues with
+technique-driven work stealing and 4 victim-selection strategies), plus the
+distributed coordinator, the TPU device-schedule adaptation, and the
+auto-selection extension (the paper's stated future work).
+"""
+
+from .autotune import OnlineTuner, default_search_space, select_offline
+from .coordinator import Coordinator, CoordinatorConfig, NodeSched
+from .device_schedule import (
+    assign_chunks,
+    build_task_table,
+    cost_balanced_assignment,
+    per_shard_tables,
+    rebalance,
+)
+from .executor import ExecutionStats, ScheduledExecutor, SchedulerConfig
+from .partitioners import (
+    PARTITIONERS,
+    Partitioner,
+    chunk_schedule,
+    chunk_sizes,
+    make_partitioner,
+)
+from .queues import QUEUE_LAYOUTS, CentralizedQueue, DistributedQueues
+from .simulator import SimOverheads, SimResult, simulate
+from .task import RangeTask, tasks_from_schedule
+from .victim import VICTIM_STRATEGIES, VictimSelector, make_victim_selector
+
+__all__ = [
+    "PARTITIONERS", "Partitioner", "chunk_schedule", "chunk_sizes", "make_partitioner",
+    "QUEUE_LAYOUTS", "CentralizedQueue", "DistributedQueues",
+    "VICTIM_STRATEGIES", "VictimSelector", "make_victim_selector",
+    "RangeTask", "tasks_from_schedule",
+    "SchedulerConfig", "ScheduledExecutor", "ExecutionStats",
+    "SimOverheads", "SimResult", "simulate",
+    "Coordinator", "CoordinatorConfig", "NodeSched",
+    "build_task_table", "assign_chunks", "per_shard_tables", "rebalance",
+    "cost_balanced_assignment",
+    "select_offline", "OnlineTuner", "default_search_space",
+]

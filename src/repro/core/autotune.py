@@ -1,0 +1,117 @@
+"""Automatic scheduling-option selection (the paper's stated future work).
+
+The paper closes: "the multitude of scheduling options ... renders the
+offline or online selection of the right scheduling option very challenging.
+We plan to extend DaphneSched to support automatic selection."
+
+We implement both modes as a beyond-paper feature:
+
+* ``select_offline``: simulate every (technique × layout × victim) combination
+  on the measured task-cost vector (cheap — the simulator runs in ms) and
+  return the argmin-makespan configuration. This formalizes the paper's own
+  observation that sparse/imbalanced work wants moderate dynamic chunks and
+  dense/balanced work wants STATIC.
+
+* ``OnlineTuner``: epsilon-greedy bandit over configurations for iterative
+  pipelines (e.g. the connected-components while-loop): each iteration
+  executes under one configuration and observes wall time; exploitation
+  converges to the best arm within a few iterations.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+import numpy as np
+
+from .executor import SchedulerConfig
+from .partitioners import PARTITIONERS
+from .simulator import SimOverheads, simulate
+from .victim import VICTIM_STRATEGIES
+
+__all__ = ["select_offline", "OnlineTuner", "default_search_space"]
+
+
+def default_search_space(include_ss: bool = False):
+    techniques = [t for t in PARTITIONERS if include_ss or t != "SS"]
+    layouts = ["CENTRALIZED", "PERCORE", "PERGROUP"]
+    victims = list(VICTIM_STRATEGIES)
+    for t, l in itertools.product(techniques, layouts):
+        if l == "CENTRALIZED":
+            yield (t, l, "SEQ")  # victim strategy irrelevant
+        else:
+            for v in victims:
+                yield (t, l, v)
+
+
+def select_offline(
+    task_costs: np.ndarray,
+    n_workers: int,
+    numa_domains: list[int] | None = None,
+    overheads: SimOverheads = SimOverheads(),
+    include_ss: bool = False,
+    seed: int = 0,
+) -> tuple[tuple[str, str, str], dict[tuple, float]]:
+    """Exhaustive simulated search; returns (best_combo, all_makespans)."""
+    scores: dict[tuple, float] = {}
+    for combo in default_search_space(include_ss):
+        t, l, v = combo
+        res = simulate(
+            task_costs, technique=t, queue_layout=l, victim_strategy=v,
+            n_workers=n_workers, numa_domains=numa_domains,
+            overheads=overheads, seed=seed,
+        )
+        scores[combo] = res.makespan
+    best = min(scores, key=scores.get)
+    return best, scores
+
+
+@dataclass
+class OnlineTuner:
+    """Epsilon-greedy selection across pipeline iterations."""
+
+    arms: list[tuple[str, str, str]]
+    epsilon: float = 0.2
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._mean = np.zeros(len(self.arms))
+        self._count = np.zeros(len(self.arms), dtype=int)
+        self._last = None
+
+    @classmethod
+    def default(cls, epsilon: float = 0.2, seed: int = 0) -> "OnlineTuner":
+        return cls(list(default_search_space()), epsilon=epsilon, seed=seed)
+
+    def suggest(self) -> tuple[str, str, str]:
+        unexplored = np.where(self._count == 0)[0]
+        if len(unexplored) and self._rng.uniform() < 0.8:
+            i = int(unexplored[0])
+        elif self._rng.uniform() < self.epsilon:
+            i = int(self._rng.integers(len(self.arms)))
+        else:
+            with np.errstate(invalid="ignore"):
+                means = np.where(self._count > 0, self._mean, np.inf)
+            i = int(np.argmin(means))
+        self._last = i
+        return self.arms[i]
+
+    def observe(self, wall_time: float) -> None:
+        i = self._last
+        if i is None:
+            return
+        self._count[i] += 1
+        self._mean[i] += (wall_time - self._mean[i]) / self._count[i]
+
+    @property
+    def best(self) -> tuple[str, str, str]:
+        means = np.where(self._count > 0, self._mean, np.inf)
+        return self.arms[int(np.argmin(means))]
+
+    def as_config(self, combo: tuple[str, str, str], n_workers: int, **kw) -> SchedulerConfig:
+        t, l, v = combo
+        return SchedulerConfig(
+            technique=t, queue_layout=l, victim_strategy=v, n_workers=n_workers, **kw
+        )

@@ -1,0 +1,160 @@
+"""TPU-native adaptation of DaphneSched: static DLS task tables + persistent
+re-balancing.
+
+SPMD hardware has no device-side dynamic queues, so (DESIGN.md §3):
+
+* **Work partitioning** transfers directly: the same 11 chunk formulas run at
+  trace time and freeze into a task table ``(n_chunks, 2) = (start, size)``.
+  A Pallas kernel (kernels/cc_propagate.py) or a shard_map body walks the
+  table — a sequential grid on one TPU core is exactly a worker draining its
+  queue in schedule order.
+
+* **Work assignment** across devices: chunks are assigned to shards either
+  round-robin (the centralized-queue analogue: interleaved draining) or in
+  contiguous runs (the PERGROUP analogue: pre-partitioning for locality).
+
+* **Work stealing** becomes *persistent re-balancing*: after a step each
+  shard reports its measured load (e.g. nnz processed, or wall-time proxy);
+  ``rebalance`` shifts chunk boundaries for the next step so overloaded
+  shards shed work to underloaded ones — moving work to ICI-neighbouring
+  shards first (the SEQPRI/NUMA-priority analogue). This is SPMD-legal and
+  converges to the balanced assignment dynamic stealing would produce.
+
+All tables are padded to a fixed ``max_chunks`` so shapes are static; padding
+rows have size 0 and are skipped with ``jnp.where`` masks.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .partitioners import chunk_schedule
+
+__all__ = [
+    "build_task_table",
+    "assign_chunks",
+    "per_shard_tables",
+    "rebalance",
+    "cost_balanced_assignment",
+]
+
+
+def build_task_table(
+    technique: str,
+    n_rows: int,
+    n_workers: int,
+    max_chunks: int | None = None,
+    seed: int = 0,
+) -> np.ndarray:
+    """(max_chunks, 2) int32 (start, size) table; padded with size-0 rows."""
+    table = chunk_schedule(technique, n_rows, n_workers, seed=seed)
+    if max_chunks is None:
+        max_chunks = len(table)
+    if len(table) > max_chunks:
+        raise ValueError(
+            f"technique {technique} produced {len(table)} chunks > max_chunks={max_chunks}"
+        )
+    out = np.zeros((max_chunks, 2), dtype=np.int32)
+    out[: len(table)] = table
+    return out
+
+
+def assign_chunks(
+    n_chunks: int, n_shards: int, mode: str = "roundrobin"
+) -> np.ndarray:
+    """Chunk -> shard assignment. 'roundrobin' interleaves (centralized-queue
+    analogue); 'contiguous' gives each shard a run (PERGROUP locality
+    analogue)."""
+    idx = np.arange(n_chunks)
+    if mode == "roundrobin":
+        return (idx % n_shards).astype(np.int32)
+    if mode == "contiguous":
+        per = -(-n_chunks // n_shards)
+        return np.minimum(idx // per, n_shards - 1).astype(np.int32)
+    raise ValueError(f"unknown assignment mode {mode!r}")
+
+
+def per_shard_tables(
+    table: np.ndarray, assignment: np.ndarray, n_shards: int
+) -> np.ndarray:
+    """Stack per-shard task tables, padded to the max chunks/shard.
+
+    Returns (n_shards, max_per_shard, 2) int32 — the input each shard_map
+    body receives (its frozen work queue).
+    """
+    groups = [table[assignment == s] for s in range(n_shards)]
+    m = max((len(g) for g in groups), default=0)
+    out = np.zeros((n_shards, max(1, m), 2), dtype=np.int32)
+    for s, g in enumerate(groups):
+        out[s, : len(g)] = g
+    return out
+
+
+def cost_balanced_assignment(
+    table: np.ndarray, chunk_costs: np.ndarray, n_shards: int
+) -> np.ndarray:
+    """Greedy LPT assignment by measured/estimated chunk cost.
+
+    The beyond-paper auto path: when per-chunk costs are known (e.g. nnz per
+    row-block), longest-processing-time-first beats both round-robin and
+    contiguous for skewed sparse inputs.
+    """
+    n = len(table)
+    order = np.argsort(-np.asarray(chunk_costs[:n], dtype=np.float64))
+    load = np.zeros(n_shards)
+    assign = np.zeros(n, dtype=np.int32)
+    for c in order:
+        s = int(np.argmin(load))
+        assign[c] = s
+        load[s] += float(chunk_costs[c])
+    return assign
+
+
+def rebalance(
+    assignment: np.ndarray,
+    measured_load: np.ndarray,
+    chunk_costs: np.ndarray,
+    neighbors_first: np.ndarray | None = None,
+    max_moves: int = 8,
+) -> np.ndarray:
+    """Persistent-stealing step: move chunks from the most- to the
+    least-loaded shard, preferring ICI-neighbour (pod-local) moves.
+
+    ``measured_load``: per-shard load from the previous step (psum'd on
+    device, fed back on host). ``neighbors_first``: (n_shards, n_shards)
+    preference matrix (smaller = closer); defaults to ring distance.
+    Returns the updated chunk->shard assignment for the next step.
+    """
+    assignment = assignment.copy()
+    n_shards = len(measured_load)
+    load = np.asarray(measured_load, dtype=np.float64).copy()
+    if neighbors_first is None:
+        i = np.arange(n_shards)
+        neighbors_first = np.minimum(
+            np.abs(i[:, None] - i[None, :]),
+            n_shards - np.abs(i[:, None] - i[None, :]),
+        )
+    for _ in range(max_moves):
+        src = int(np.argmax(load))
+        mean = load.mean()
+        if load[src] <= 1.05 * mean:  # within 5% of balance: stop
+            break
+        # candidate destinations: underloaded, nearest first (SEQPRI analogue)
+        dsts = sorted(
+            (s for s in range(n_shards) if load[s] < mean),
+            key=lambda s: neighbors_first[src, s],
+        )
+        if not dsts:
+            break
+        dst = dsts[0]
+        # steal from the tail of src's chunks (paper: thief pops victim tail)
+        src_chunks = np.where(assignment == src)[0]
+        if len(src_chunks) <= 1:
+            load[src] = -np.inf  # cannot shed further
+            continue
+        c = src_chunks[-1]
+        assignment[c] = dst
+        delta = float(chunk_costs[c])
+        load[src] -= delta
+        load[dst] += delta
+    return assignment

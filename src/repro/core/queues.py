@@ -1,0 +1,204 @@
+"""Queue layouts of DaphneSched (paper §3 'Queue management').
+
+Three layouts:
+  CENTRALIZED  one lock-protected queue per computing-resource type; workers
+               self-schedule chunks from it via the partitioner.
+  PERCORE      one queue per worker; empty workers steal.
+  PERGROUP     one queue per worker group (NUMA domain / CPU socket); the
+               input is pre-partitioned into #groups blocks first (the paper
+               shows this restores locality for STATIC).
+
+The centralized layout computes chunks lazily (Partitioner.next_chunk at pop
+time). Distributed layouts pre-fill queues with the partitioner's chunk
+sequence (round-robin across queues, preserving the technique's granularity
+sequence), and *stealing amounts follow the partitioning technique* — the
+paper's contribution C.2: a thief steals ``getNextChunk(R_victim)`` tasks
+from the victim's queue tail.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from .partitioners import Partitioner, make_partitioner
+from .task import RangeTask
+
+__all__ = ["CentralizedQueue", "DistributedQueues", "QUEUE_LAYOUTS"]
+
+
+class CentralizedQueue:
+    """Single work queue + partitioner: classic self-scheduling.
+
+    ``pop(worker_id)`` returns a list of RangeTasks forming one chunk.
+    Lock contention on this queue is the effect the paper measures (P5);
+    ``contended_pops`` counts pops that had to wait on the lock.
+    """
+
+    def __init__(self, tasks: list[RangeTask], partitioner: Partitioner):
+        self._tasks = deque(tasks)
+        self._part = partitioner
+        self._lock = threading.Lock()
+        self.contended_pops = 0
+        self.pops = 0
+
+    def pop(self, worker_id: int = 0) -> list[RangeTask]:
+        acquired = self._lock.acquire(blocking=False)
+        if not acquired:
+            self._lock.acquire()
+            self.contended_pops += 1
+        try:
+            self.pops += 1
+            n = self._part.next_chunk(worker_id)
+            out = []
+            while n > 0 and self._tasks:
+                out.append(self._tasks.popleft())
+                n -= 1
+            return out
+        finally:
+            self._lock.release()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._tasks)
+
+
+class _WorkerQueue:
+    __slots__ = ("dq", "lock", "partitioner")
+
+    def __init__(self, partitioner: Partitioner):
+        self.dq: deque[RangeTask] = deque()
+        self.lock = threading.Lock()
+        self.partitioner = partitioner
+
+
+class DistributedQueues:
+    """PERCORE / PERGROUP queues with technique-driven stealing (paper C.2).
+
+    ``n_queues`` == n_workers (PERCORE) or #groups (PERGROUP).
+    ``owner_of(worker_id)`` maps a worker to its home queue.
+
+    Pre-filling: the global chunk sequence of the chosen partitioner is dealt
+    round-robin to queues (PERCORE), or the input is pre-partitioned into
+    #groups contiguous blocks and each block's chunks go to that group's
+    queue (PERGROUP — preserves spatial locality, paper Fig 8/9 discussion).
+
+    Stealing: a thief pops from the victim queue's *tail* an amount equal to
+    ``steal_partitioner.next_chunk()`` recomputed against the victim's
+    remaining tasks — i.e. stolen granularity follows the self-scheduling
+    technique.
+    """
+
+    def __init__(
+        self,
+        tasks: list[RangeTask],
+        technique: str,
+        n_workers: int,
+        layout: str = "PERCORE",
+        groups: list[int] | None = None,
+        seed: int = 0,
+    ):
+        layout = layout.upper()
+        if layout not in ("PERCORE", "PERGROUP"):
+            raise ValueError(f"layout must be PERCORE or PERGROUP, got {layout}")
+        self.layout = layout
+        self.n_workers = n_workers
+        self.technique = technique
+        self.seed = seed
+        groups = list(groups) if groups is not None else [0] * n_workers
+        self._group_of = groups
+        n_groups = max(groups) + 1
+
+        if layout == "PERCORE":
+            self.n_queues = n_workers
+            self._home = list(range(n_workers))
+        else:
+            self.n_queues = n_groups
+            self._home = groups
+
+        self._queues = [
+            _WorkerQueue(make_partitioner(technique, max(1, len(tasks)), n_workers, seed=seed + q))
+            for q in range(self.n_queues)
+        ]
+        self._fill(tasks)
+        self.steals = 0
+        self.failed_steals = 0
+
+    # -- filling ---------------------------------------------------------------
+    def _fill(self, tasks: list[RangeTask]) -> None:
+        n = len(tasks)
+        if n == 0:
+            return
+        if self.layout == "PERGROUP":
+            # Pre-partition into #queues contiguous blocks (spatial locality),
+            # then chunk each block with the technique.
+            block = -(-n // self.n_queues)
+            for q in range(self.n_queues):
+                blk = tasks[q * block : (q + 1) * block]
+                part = make_partitioner(
+                    self.technique, max(1, len(blk)), max(1, self.n_workers // self.n_queues),
+                    seed=self.seed + q,
+                )
+                i = 0
+                while i < len(blk):
+                    c = part.next_chunk()
+                    if c == 0:
+                        break
+                    self._queues[q].dq.extend(blk[i : i + c])
+                    i += c
+                self._queues[q].dq.extend(blk[i:])  # safety: never drop tasks
+        else:
+            # PERCORE: global chunk sequence dealt round-robin to workers —
+            # no pre-partitioning (the paper observes STATIC then loses
+            # locality, matching its Fig 8 discussion).
+            part = make_partitioner(self.technique, n, self.n_workers, seed=self.seed)
+            i, q = 0, 0
+            while i < n:
+                c = part.next_chunk()
+                if c == 0:
+                    break
+                self._queues[q % self.n_queues].dq.extend(tasks[i : i + c])
+                i += c
+                q += 1
+            self._queues[0].dq.extend(tasks[i:])  # safety: never drop tasks
+
+    # -- worker API --------------------------------------------------------------
+    def owner_of(self, worker_id: int) -> int:
+        return self._home[worker_id]
+
+    def pop_local(self, worker_id: int) -> RangeTask | None:
+        q = self._queues[self.owner_of(worker_id)]
+        with q.lock:
+            return q.dq.popleft() if q.dq else None
+
+    def steal(self, thief_id: int, victim_queue: int) -> list[RangeTask]:
+        """Steal from the victim's tail; amount follows the technique (C.2)."""
+        q = self._queues[victim_queue]
+        with q.lock:
+            r = len(q.dq)
+            if r == 0:
+                self.failed_steals += 1
+                return []
+            # chunk computed against the victim's remaining work
+            part = make_partitioner(self.technique, r, self.n_workers, seed=self.seed)
+            c = max(1, min(r, part.next_chunk(thief_id)))
+            stolen = [q.dq.pop() for _ in range(c)]
+            self.steals += 1
+            return stolen
+
+    def queue_sizes(self) -> list[int]:
+        return [len(q.dq) for q in self._queues]
+
+    def push_local(self, worker_id: int, tasks: list[RangeTask]) -> None:
+        q = self._queues[self.owner_of(worker_id)]
+        with q.lock:
+            q.dq.extend(tasks)
+
+    def __len__(self) -> int:
+        return sum(self.queue_sizes())
+
+
+QUEUE_LAYOUTS = ("CENTRALIZED", "PERCORE", "PERGROUP")

@@ -1,0 +1,109 @@
+"""Host data pipeline scheduled by DaphneSched (DESIGN.md §6.1).
+
+Batch assembly for LM training is row-parallel work: each *task* tokenizes/
+packs one shard of sample rows into the global batch buffer. The pipeline
+partitions the per-step work with a DLS technique and executes it on the
+threaded executor (per-worker queues + stealing by default) — the paper's
+scheduler running unchanged at the data layer, where task costs genuinely
+vary (variable-length documents).
+
+``SyntheticCorpus`` generates length-skewed documents (log-normal lengths:
+the realistic imbalanced case); ``prefetch`` overlaps assembly of batch t+1
+with device execution of batch t via a background thread.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.executor import ScheduledExecutor, SchedulerConfig
+from ..core.partitioners import chunk_schedule
+from ..core.task import tasks_from_schedule
+
+__all__ = ["SyntheticCorpus", "DataPipeline"]
+
+
+@dataclass
+class SyntheticCorpus:
+    """Length-skewed synthetic documents over a vocab (no I/O)."""
+
+    vocab_size: int
+    mean_len: float = 512.0
+    sigma: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample_doc(self, doc_id: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, doc_id))
+        n = max(8, int(rng.lognormal(np.log(self.mean_len), self.sigma)))
+        return rng.integers(0, self.vocab_size, n, dtype=np.int32)
+
+
+class DataPipeline:
+    """Packs documents into (global_batch, seq_len + 1) token matrices."""
+
+    def __init__(self, corpus: SyntheticCorpus, global_batch: int, seq_len: int,
+                 sched: SchedulerConfig | None = None):
+        self.corpus = corpus
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.sched = sched or SchedulerConfig(
+            technique="GSS", queue_layout="PERCORE", victim_strategy="SEQPRI",
+            n_workers=4)
+        self._executor = ScheduledExecutor(self.sched)
+        self._doc_cursor = 0
+        self._lock = threading.Lock()
+
+    # -- one batch = global_batch row-tasks ------------------------------------
+    def _assemble(self, step: int) -> np.ndarray:
+        out = np.zeros((self.global_batch, self.seq_len + 1), np.int32)
+        base = step * self.global_batch
+
+        def pack_rows(start: int, size: int):
+            for r in range(start, start + size):
+                buf, fill = [], 0
+                d = 0
+                while fill < self.seq_len + 1:
+                    doc = self.corpus.sample_doc(base * 131 + r * 17 + d)
+                    buf.append(doc)
+                    fill += len(doc)
+                    d += 1
+                row = np.concatenate(buf)[: self.seq_len + 1]
+                out[start + (r - start)] = row  # rows disjoint -> no lock needed
+            return size
+
+        schedule = chunk_schedule(self.sched.technique, self.global_batch,
+                                  self.sched.n_workers, seed=self.sched.seed)
+        tasks = tasks_from_schedule(schedule, pack_rows)
+        results, stats = self._executor.run(tasks)
+        assert sum(results.values()) == self.global_batch
+        self._last_stats = stats
+        return out
+
+    def batches(self, n_steps: int, start_step: int = 0):
+        for s in range(start_step, start_step + n_steps):
+            yield {"tokens": self._assemble(s)}
+
+    def prefetch(self, n_steps: int, depth: int = 2, start_step: int = 0):
+        """Background-thread prefetch: overlap host assembly with device step."""
+        q: queue.Queue = queue.Queue(maxsize=depth)
+        stop = object()
+
+        def producer():
+            for b in self.batches(n_steps, start_step):
+                q.put(b)
+            q.put(stop)
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        while True:
+            item = q.get()
+            if item is stop:
+                return
+            yield item

@@ -1,0 +1,136 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init). Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k [--multi-pod] [--attn-impl banded] [--tag name]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per cell this lowers the step with fully-sharded ShapeDtypeStruct inputs,
+compiles it, prints memory_analysis()/cost_analysis(), and writes artifacts
+(JSON + gzipped post-SPMD HLO) to artifacts/dryrun/ for the roofline
+analyzer (benchmarks/roofline.py).
+"""
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import SHAPES, list_configs
+from .mesh import make_production_mesh
+from .specs import cell_specs, runnable, skip_reason
+from ..runtime.pspec import axis_rules
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             attn_impl: str = "chunked", tag: str = "",
+             save_hlo: bool = True, seq_shard_attention: bool = False,
+             **cell_opts) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "attn_impl": attn_impl, "tag": tag,
+                 "n_devices": 512 if multi_pod else 256}
+    if not runnable(arch, shape_name):
+        out["status"] = "skipped"
+        out["reason"] = skip_reason(arch, shape_name)
+        return out
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # single-pod mesh uses the first 256 of the 512 host devices
+    t0 = time.time()
+    try:
+        cell = cell_specs(arch, shape_name, mesh, attn_impl=attn_impl,
+                          seq_shard_attention=seq_shard_attention, **cell_opts)
+        with axis_rules(mesh, cell["rules"]):
+            lowered = jax.jit(cell["step"],
+                              donate_argnums=cell.get("donate", ())).lower(*cell["args"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        out.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": {
+                k: int(getattr(ma, k)) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes") if hasattr(ma, k)
+            } if ma is not None else None,
+            "cost_analysis": {k: float(v) for k, v in ca.items()
+                              if isinstance(v, (int, float))},
+            "n_microbatches": cell.get("n_microbatches"),
+        })
+        if save_hlo:
+            ARTIFACTS.mkdir(parents=True, exist_ok=True)
+            hlo = compiled.as_text()
+            with gzip.open(ARTIFACTS / f"{cell_id}.hlo.txt.gz", "wt") as f:
+                f.write(hlo)
+            out["hlo_bytes"] = len(hlo)
+    except Exception as e:  # a failure here is a bug in our sharding config
+        out["status"] = "failed"
+        out["error"] = f"{type(e).__name__}: {e}"
+        out["traceback"] = traceback.format_exc()[-4000:]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn-impl", default="chunked",
+                    choices=["chunked", "banded", "full"])
+    ap.add_argument("--seq-shard-attention", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_configs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape))
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    for arch, shape in cells:
+        res = run_cell(arch, shape, args.multi_pod, attn_impl=args.attn_impl,
+                       tag=args.tag, save_hlo=not args.no_hlo,
+                       seq_shard_attention=args.seq_shard_attention)
+        mesh_name = res["mesh"]
+        cell_id = f"{arch}__{shape}__{mesh_name}" + (f"__{args.tag}" if args.tag else "")
+        (ARTIFACTS / f"{cell_id}.json").write_text(json.dumps(res, indent=1))
+        status = res["status"]
+        extra = ""
+        if status == "ok":
+            ma = res.get("memory_analysis") or {}
+            extra = (f" lower={res['lower_s']}s compile={res['compile_s']}s "
+                     f"args={ma.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                     f"temp={ma.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                     f"flops={res['cost_analysis'].get('flops', 0):.3g}")
+        elif status == "failed":
+            extra = " " + res["error"][:200]
+        print(f"[dryrun] {cell_id}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Everything here is shape-only — no allocation (the dry-run requirement).
+``cell_specs`` returns the step callable plus fully-sharded ShapeDtypeStruct
+arguments ready for ``jax.jit(step).lower(...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config
+from ..models.model import FRONTEND_DIM, Model
+from ..optim.adamw import AdamWConfig
+from ..runtime import mesh_rules, steps
+from ..runtime.pspec import axis_rules
+
+__all__ = ["cell_specs", "train_microbatches", "runnable", "skip_reason"]
+
+# desired grad-accum microbatch counts (single-pod; clamped by batch shards)
+TRAIN_MICROBATCHES = {
+    "internvl2-26b": 16, "zamba2-7b": 16, "granite-8b": 8, "qwen2-0.5b": 4,
+    "yi-9b": 8, "qwen1.5-4b": 8, "whisper-small": 1,
+    "deepseek-v2-lite-16b": 4, "qwen2-moe-a2.7b": 4, "rwkv6-3b": 8,
+}
+
+
+def runnable(arch: str, shape_name: str) -> bool:
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def skip_reason(arch: str, shape_name: str) -> str:
+    return ("full-attention arch: O(S^2) attention at 524k is not serviceable; "
+            "long_500k runs only for SSM/hybrid archs (DESIGN.md §6)")
+
+
+def train_microbatches(arch: str, mesh) -> int:
+    n_batch_shards = int(np.prod([mesh.shape[a] for a in mesh.shape if a != "model"]))
+    gb = SHAPES["train_4k"].global_batch
+    return max(1, min(TRAIN_MICROBATCHES[arch], gb // n_batch_shards))
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _batch_spec_axes(mesh, global_batch):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    return axes if (global_batch % n == 0 and global_batch >= n) else ()
+
+
+def _spec_tree_to_sds(shapes, specs, mesh, dtype_map=None):
+    def conv(s, sp):
+        dt = s.dtype if dtype_map is None else dtype_map(s)
+        return _sds(s.shape, dt, mesh, sp)
+    return jax.tree.map(conv, shapes, specs,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def _strip_fsdp(spec_tree):
+    """Replace 'data' (FSDP) entries with None in a PartitionSpec tree —
+    serving replicates params over 'data' (per-step gathers cost more than
+    the replicated bytes at decode; §Perf)."""
+    def conv(sp):
+        return P(*[None if el == "data" else el for el in sp])
+    return jax.tree.map(conv, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cell_specs(arch: str, shape_name: str, mesh, *,
+               attn_impl: str = "chunked",
+               serve_dtype=jnp.bfloat16,
+               seq_shard_attention: bool = False,
+               serve_no_fsdp: bool = False,
+               moe_capacity: float | None = None,
+               remat_policy: str = "full",
+               overrides: dict | None = None):
+    """Build (step_fn, args_specs, in_shardings, policy, model) for a cell.
+
+    Returns a dict with: step (callable), args (tuple of ShapeDtypeStructs),
+    policy (ShardingPolicy), rules (axis-rule dict), model.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg = dataclasses.replace(cfg, attn_impl=attn_impl,
+                              remat_policy=remat_policy, **(overrides or {}))  # type: ignore[arg-type]
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=cfg.moe.padded(mesh.shape["model"]))
+        if shape.kind != "train":  # drop-free capacity for serving
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.n_routed) / cfg.moe.top_k))
+        elif moe_capacity is not None:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=moe_capacity))
+
+    long_ctx = shape_name == "long_500k"
+    policy = mesh_rules.make_policy(
+        cfg, mesh, shape.kind, seq_shard_attention=seq_shard_attention,
+        long_context=long_ctx)
+    if _batch_spec_axes(mesh, shape.global_batch) == ():
+        policy = dataclasses.replace(policy, batch_axes=())  # batch too small
+    if shape.kind == "decode":
+        # decode: KV cache seq-sharded; q heads replicated (DESIGN.md §5)
+        kv_axes = ("data", "model") if long_ctx else ("model",)
+        policy = dataclasses.replace(policy, shard_heads=False,
+                                     shard_kv_heads=False, kv_seq_axes=kv_axes)
+    elif shape.kind == "prefill":
+        # prefill cache storage is seq-sharded over 'model' (kv heads of most
+        # archs don't divide the axis; DESIGN.md §5)
+        policy = dataclasses.replace(policy, shard_kv_heads=False,
+                                     kv_seq_axes=("model",))
+    rules = policy.rules()
+
+    model = Model(cfg)
+    b_axes = _batch_spec_axes(mesh, shape.global_batch)
+    gb, S = shape.global_batch, shape.seq_len
+
+    with axis_rules(mesh, rules):
+        param_shapes = jax.eval_shape(lambda: model.init_params(jax.random.key(0)))
+        pspecs = mesh_rules.param_pspec_tree(param_shapes, policy)
+
+        if shape.kind == "train":
+            cfg_train = cfg
+            opt_cfg = AdamWConfig()
+            n_mb = train_microbatches(arch, mesh)
+            params_sds = _spec_tree_to_sds(param_shapes, pspecs, mesh)
+            opt_sds = {
+                "mu": params_sds, "nu": params_sds,
+                "step": _sds((), jnp.int32, mesh, P()),
+            }
+            # mu/nu share the params' shapes/specs but are fp32 already (init is fp32)
+            state_sds = steps.TrainState(params=params_sds, opt=opt_sds,
+                                         step=_sds((), jnp.int32, mesh, P()))
+            batch_sds = {"tokens": _sds((gb, S + 1), jnp.int32, mesh, P(b_axes, None))}
+            if cfg.frontend == "vision":
+                batch_sds["patch_embeds"] = _sds(
+                    (gb, cfg.n_frontend_tokens, FRONTEND_DIM["vision"]),
+                    jnp.float32, mesh, P(b_axes, None, None))
+            if cfg.frontend == "audio":
+                batch_sds["frames"] = _sds(
+                    (gb, cfg.encdec.n_enc_positions, FRONTEND_DIM["audio"]),
+                    jnp.float32, mesh, P(b_axes, None, None))
+            step = steps.build_train_step(model, opt_cfg, n_microbatches=n_mb)
+            return {"step": step, "args": (state_sds, batch_sds),
+                    "policy": policy, "rules": rules, "model": model,
+                    "cfg": cfg, "n_microbatches": n_mb}
+
+        # serving: params in serve_dtype
+        if serve_no_fsdp:
+            pspecs = _strip_fsdp(pspecs)
+        params_sds = _spec_tree_to_sds(param_shapes, pspecs, mesh,
+                                       dtype_map=lambda s: serve_dtype)
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(gb, S, dtype=serve_dtype))
+        cspecs = mesh_rules.cache_pspec_tree(cache_shapes, cfg, policy)
+        cache_sds = _spec_tree_to_sds(cache_shapes, cspecs, mesh)
+
+        if shape.kind == "prefill":
+            batch_sds = {"tokens": _sds((gb, S), jnp.int32, mesh, P(b_axes, None))}
+            if cfg.frontend == "vision":
+                batch_sds["patch_embeds"] = _sds(
+                    (gb, cfg.n_frontend_tokens, FRONTEND_DIM["vision"]),
+                    jnp.float32, mesh, P(b_axes, None, None))
+            if cfg.frontend == "audio":
+                batch_sds["frames"] = _sds(
+                    (gb, cfg.encdec.n_enc_positions, FRONTEND_DIM["audio"]),
+                    jnp.float32, mesh, P(b_axes, None, None))
+            step = steps.build_prefill_step(model)
+            return {"step": step, "args": (params_sds, batch_sds, cache_sds),
+                    "donate": (2,),  # cache aliases in->out (halves live bytes)
+                    "policy": policy, "rules": rules, "model": model, "cfg": cfg}
+
+        # decode: one new token with a filled cache of length S
+        tokens_sds = _sds((gb, 1), jnp.int32, mesh, P(b_axes, None))
+        index_sds = _sds((), jnp.int32, mesh, P())
+        step = steps.build_decode_step(model)
+        return {"step": step, "args": (params_sds, tokens_sds, cache_sds, index_sds),
+                "donate": (2,),  # cache aliases in->out (halves live bytes)
+                "policy": policy, "rules": rules, "model": model, "cfg": cfg}

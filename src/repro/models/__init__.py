@@ -1,0 +1,7 @@
+"""LM substrate: layers, attention (GQA/MLA), MoE, Mamba2, RWKV6, enc-dec."""
+
+from .model import (Model, count_active_params, count_params, cross_entropy,
+                    param_shapes)
+
+__all__ = ["Model", "count_params", "count_active_params", "cross_entropy",
+           "param_shapes"]

@@ -1,0 +1,191 @@
+"""Per-architecture decoder layers (init + apply), scan-compatible.
+
+Every layer apply has the uniform signature
+
+    apply(params, x, *, positions, impl, cache, cache_index) -> (x, new_cache, aux)
+
+so the model can lax.scan over stacked layer params with caches threaded as
+scan xs/ys. ``aux`` is a scalar (MoE load-balance loss; 0 elsewhere).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import gqa_attention, init_attention, init_mla, mla_attention
+from .layers import Params, init_mlp, layer_norm, mlp, rms_norm
+from .moe import init_moe, moe_block
+from .rwkv import (init_rwkv6, rwkv6_channel_mix, rwkv6_time_mix)
+from .ssm import init_mamba2, mamba2_block
+
+ZERO = jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense / GQA transformer layer (llama, qwen, yi, granite, internvl)
+# ---------------------------------------------------------------------------
+
+def init_dense_layer(key, cfg, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, bias=cfg.qkv_bias, dtype=dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, gated=True, dtype=dtype),
+    }
+
+
+def apply_dense_layer(params, x, cfg, *, positions, impl, cache, cache_index):
+    h, new_cache = gqa_attention(params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
+                                 cfg, positions=positions, impl=impl,
+                                 cache=cache, cache_index=cache_index)
+    x = x + h
+    x = x + mlp(params["mlp"], rms_norm(x, params["ln2"], cfg.norm_eps))
+    return x, new_cache, ZERO
+
+
+# ---------------------------------------------------------------------------
+# GQA + MoE layer (qwen2-moe)
+# ---------------------------------------------------------------------------
+
+def init_moe_layer(key, cfg, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, bias=cfg.qkv_bias, dtype=dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "moe": init_moe(k2, cfg.d_model, cfg.moe, dtype=dtype),
+    }
+
+
+def apply_moe_layer(params, x, cfg, *, positions, impl, cache, cache_index):
+    h, new_cache = gqa_attention(params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
+                                 cfg, positions=positions, impl=impl,
+                                 cache=cache, cache_index=cache_index)
+    x = x + h
+    h, aux = moe_block(params["moe"], rms_norm(x, params["ln2"], cfg.norm_eps), cfg)
+    return x + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# MLA + MoE layer (deepseek-v2-lite); layer 0 uses a dense FFN
+# ---------------------------------------------------------------------------
+
+def init_mla_layer(key, cfg, dense_ffn: bool, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_mla(k1, cfg.d_model, cfg.n_heads, cfg.mla, dtype=dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if dense_ffn:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, gated=True, dtype=dtype)
+    else:
+        p["moe"] = init_moe(k2, cfg.d_model, cfg.moe, dtype=dtype)
+    return p
+
+
+def apply_mla_layer(params, x, cfg, *, positions, impl, cache, cache_index):
+    h, new_cache = mla_attention(params["attn"], rms_norm(x, params["ln1"], cfg.norm_eps),
+                                 cfg, positions=positions, impl=impl,
+                                 cache=cache, cache_index=cache_index)
+    x = x + h
+    h2 = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if "moe" in params:
+        h, aux = moe_block(params["moe"], h2, cfg)
+    else:
+        h, aux = mlp(params["mlp"], h2), ZERO
+    return x + h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 layer (zamba2 trunk)
+# ---------------------------------------------------------------------------
+
+def init_mamba_layer(key, cfg, dtype=jnp.float32) -> Params:
+    return {
+        "ln": jnp.ones((cfg.d_model,), dtype),
+        "mamba": init_mamba2(key, cfg, dtype=dtype),
+    }
+
+
+def apply_mamba_layer(params, x, cfg, *, cache, cache_index):
+    h, new_cache = mamba2_block(params["mamba"], rms_norm(x, params["ln"], cfg.norm_eps),
+                                cfg, cache=cache, cache_index=cache_index)
+    return x + h, new_cache, ZERO
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 layer
+# ---------------------------------------------------------------------------
+
+def init_rwkv_layer(key, cfg, dtype=jnp.float32) -> Params:
+    p = init_rwkv6(key, cfg, dtype=dtype)
+    p["ln1"] = jnp.ones((cfg.d_model,), dtype)
+    p["ln1b"] = jnp.zeros((cfg.d_model,), dtype)
+    p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+    p["ln2b"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_rwkv_layer(params, x, cfg, *, cache, cache_index):
+    h, tm_cache = rwkv6_time_mix(params, layer_norm(x, params["ln1"], params["ln1b"], cfg.norm_eps),
+                                 cfg, cache=cache, cache_index=cache_index)
+    x = x + h
+    h, cm_cache = rwkv6_channel_mix(params, layer_norm(x, params["ln2"], params["ln2b"], cfg.norm_eps),
+                                    cache=cache)
+    new_cache = None
+    if cache is not None:
+        new_cache = {**(tm_cache or {}), **(cm_cache or {})}
+    return x + h, new_cache, ZERO
+
+
+# ---------------------------------------------------------------------------
+# Whisper enc/dec layers (LayerNorm + GELU MLP, bidirectional encoder)
+# ---------------------------------------------------------------------------
+
+def init_whisper_layer(key, cfg, cross: bool, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype), "ln1b": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, bias=True, dtype=dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype), "ln2b": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, gated=False, bias=True, dtype=dtype),
+    }
+    if cross:
+        p["lnx"] = jnp.ones((cfg.d_model,), dtype)
+        p["lnxb"] = jnp.zeros((cfg.d_model,), dtype)
+        p["cross"] = init_attention(ks[2], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim, bias=True, dtype=dtype)
+    return p
+
+
+def apply_whisper_enc_layer(params, x, cfg, *, impl):
+    h, _ = gqa_attention(params["attn"], layer_norm(x, params["ln1"], params["ln1b"], cfg.norm_eps),
+                         cfg, positions=None, impl=impl, causal=False)
+    x = x + h
+    x = x + mlp(params["mlp"], layer_norm(x, params["ln2"], params["ln2b"], cfg.norm_eps),
+                gated=False, act="gelu")
+    return x
+
+
+def apply_whisper_dec_layer(params, x, cfg, *, positions, impl, cache, cache_index,
+                            cross_kv):
+    h, new_cache = gqa_attention(params["attn"],
+                                 layer_norm(x, params["ln1"], params["ln1b"], cfg.norm_eps),
+                                 cfg, positions=positions, impl=impl,
+                                 cache=cache, cache_index=cache_index)
+    x = x + h
+    h, _ = gqa_attention(params["cross"],
+                         layer_norm(x, params["lnx"], params["lnxb"], cfg.norm_eps),
+                         cfg, positions=None, impl=impl, cross_kv=cross_kv)
+    x = x + h
+    x = x + mlp(params["mlp"], layer_norm(x, params["ln2"], params["ln2b"], cfg.norm_eps),
+                gated=False, act="gelu")
+    return x, new_cache, ZERO

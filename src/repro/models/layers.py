@@ -1,0 +1,126 @@
+"""Shared neural-net building blocks (pure jnp, param pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init functions return them.
+  * dtype policy: params stored in ``param_dtype`` (fp32 master for train),
+    compute in ``cfg`` compute dtype (bf16) — casting happens at use.
+  * activations are annotated with logical axes via runtime.pspec.shard.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.pspec import shard
+
+Params = dict
+
+DEFAULT_COMPUTE_DTYPE = jnp.bfloat16
+
+
+def he_init(key, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * (1.0 / math.sqrt(fan_in))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, dh) with dh even; positions: (S,) or broadcastable."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (S, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (llama-style) / plain MLP (whisper)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True, bias: bool = False,
+             dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    wi_cols = 2 * d_ff if gated else d_ff
+    p = {
+        "wi": he_init(k1, (d_model, wi_cols), d_model, dtype),
+        "wo": he_init(k2, (d_ff, d_model), d_ff, dtype),
+    }
+    if bias:
+        p["bi"] = jnp.zeros((wi_cols,), dtype)
+        p["bo"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp(params: Params, x: jax.Array, gated: bool = True, act: str = "silu") -> jax.Array:
+    h = dense(x, params["wi"], params.get("bi"))
+    h = shard(h, "batch", None, "ffn")
+    if gated:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g) * u if act == "silu" else jax.nn.gelu(g) * u
+    else:
+        h = jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)
+    y = dense(h, params["wo"], params.get("bo"))
+    return shard(y, "batch", None, "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head (vocab-parallel via sharding constraints; XLA SPMD
+# inserts the collectives — DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def embed(params: Params, tokens: jax.Array) -> jax.Array:
+    from ..runtime.pspec import current_rules
+    from .vocab_parallel import vp_embed
+    table = params["table"]
+    rules = current_rules()
+    batch_axes = rules.resolve("batch") if rules is not None else None
+    y = vp_embed(table, tokens, batch_axes or None)
+    return shard(y, "batch", None, "embed")
+
+
+def unembed(params: Params, x: jax.Array, table: jax.Array | None = None) -> jax.Array:
+    """Logits, vocab-sharded over 'model'. ``table`` for tied embeddings."""
+    w = table.T if table is not None else params["w"]
+    logits = x @ w.astype(x.dtype)
+    return shard(logits, "batch", None, "vocab")

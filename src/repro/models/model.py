@@ -1,0 +1,446 @@
+"""Model assembly: ArchConfig -> init / train-loss / prefill / decode.
+
+Layers are stacked (leading L dim) and executed with lax.scan; KV/SSM caches
+thread through the scan as xs/ys so every architecture — including zamba2's
+super-block structure (6 mamba layers + shared attention, scanned over 13
+super-blocks) and whisper's enc-dec — shares one code path per family.
+
+``jax.checkpoint`` wraps the scan body when cfg.remat (training).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.pspec import shard
+from . import blocks
+from .blocks import ZERO
+
+
+def _remat(cfg, fn):
+    """Wrap a scan body per cfg.remat/remat_policy (§Perf knob)."""
+    if not cfg.remat:
+        return fn
+    if getattr(cfg, "remat_policy", "full") == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+from .layers import (Params, dense, embed, he_init, init_embedding, layer_norm,
+                     rms_norm, unembed)
+
+NEG_INF = -1e30
+
+FRONTEND_DIM = {"vision": 1024, "audio": 128}
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _stacked_init(key, n: int, init_one):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    """(S,) -> (S, d) sinusoidal embedding (whisper-style)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * math.log(10000.0) / max(1, half - 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def mask_vocab_padding(logits: jax.Array, vocab_size: int) -> jax.Array:
+    v_pad = logits.shape[-1]
+    if v_pad == vocab_size:
+        return logits
+    mask = jnp.arange(v_pad) < vocab_size
+    return jnp.where(mask, logits, NEG_INF)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int):
+    """logits (B,S,Vp) fp32-safe CE; labels (B,S) with -1 = masked."""
+    logits = mask_vocab_padding(logits.astype(jnp.float32), vocab_size)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.where(mask, lse - ll, 0.0)
+    denom = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / denom
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Model:
+    cfg: Any
+
+    # ---- init ------------------------------------------------------------------
+    def init_params(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: Params = {
+            "embed": init_embedding(keys[0], cfg.padded_vocab, cfg.d_model),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = {"w": he_init(keys[1], (cfg.d_model, cfg.padded_vocab), cfg.d_model)}
+        if cfg.frontend:
+            df = FRONTEND_DIM[cfg.frontend]
+            params["frontend"] = {
+                "w": he_init(keys[2], (df, cfg.d_model), df),
+                "b": jnp.zeros((cfg.d_model,), jnp.float32),
+            }
+        fam = cfg.family
+        if cfg.rwkv is not None:
+            params["layers"] = _stacked_init(keys[3], cfg.n_layers,
+                                             lambda k: blocks.init_rwkv_layer(k, cfg))
+        elif cfg.ssm is not None:
+            ae = cfg.ssm.attn_every
+            n_sb = cfg.n_layers // ae
+            tail = cfg.n_layers - n_sb * ae
+            main = _stacked_init(keys[3], n_sb * ae, lambda k: blocks.init_mamba_layer(k, cfg))
+            params["mamba_main"] = jax.tree.map(
+                lambda a: a.reshape(n_sb, ae, *a.shape[1:]), main)
+            if tail:
+                params["mamba_tail"] = _stacked_init(keys[4], tail,
+                                                     lambda k: blocks.init_mamba_layer(k, cfg))
+            params["shared_attn"] = blocks.init_dense_layer(keys[5], cfg)
+        elif cfg.encdec is not None:
+            params["enc_layers"] = _stacked_init(
+                keys[3], cfg.encdec.n_enc_layers,
+                lambda k: blocks.init_whisper_layer(k, cfg, cross=False))
+            params["dec_layers"] = _stacked_init(
+                keys[4], cfg.n_layers,
+                lambda k: blocks.init_whisper_layer(k, cfg, cross=True))
+            params["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+            params["enc_norm_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            params["final_norm_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        elif cfg.mla is not None:
+            if cfg.first_layer_dense:
+                params["layer0"] = blocks.init_mla_layer(keys[4], cfg, dense_ffn=True)
+                params["layers"] = _stacked_init(
+                    keys[3], cfg.n_layers - 1,
+                    lambda k: blocks.init_mla_layer(k, cfg, dense_ffn=False))
+            else:
+                params["layers"] = _stacked_init(
+                    keys[3], cfg.n_layers,
+                    lambda k: blocks.init_mla_layer(k, cfg, dense_ffn=False))
+        elif cfg.moe is not None:
+            params["layers"] = _stacked_init(keys[3], cfg.n_layers,
+                                             lambda k: blocks.init_moe_layer(k, cfg))
+        else:
+            params["layers"] = _stacked_init(keys[3], cfg.n_layers,
+                                             lambda k: blocks.init_dense_layer(k, cfg))
+        return params
+
+    # ---- caches ----------------------------------------------------------------
+    def init_cache(self, batch: int, s_max: int, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        kv, dh = cfg.n_kv_heads, cfg.head_dim
+
+        def kv_cache(n, s):
+            return {"k": jnp.zeros((n, batch, kv, s, dh), dtype),
+                    "v": jnp.zeros((n, batch, kv, s, dh), dtype)}
+
+        if cfg.rwkv is not None:
+            from .rwkv import init_rwkv6_cache
+            one = init_rwkv6_cache(cfg, batch, dtype)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one)
+        if cfg.ssm is not None:
+            from .ssm import init_mamba2_cache
+            ae = cfg.ssm.attn_every
+            n_sb = cfg.n_layers // ae
+            tail = cfg.n_layers - n_sb * ae
+            one = init_mamba2_cache(cfg, batch, dtype)
+            cache = {
+                "mamba_main": jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (n_sb, ae, *a.shape)), one),
+                "attn": kv_cache(n_sb, s_max),
+            }
+            if tail:
+                cache["mamba_tail"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (tail, *a.shape)), one)
+            return cache
+        if cfg.encdec is not None:
+            return {
+                "self": kv_cache(cfg.n_layers, s_max),
+                "cross": kv_cache(cfg.n_layers, cfg.encdec.n_enc_positions),
+                "has_cross": jnp.zeros((), jnp.int32),
+            }
+        if cfg.mla is not None:
+            r, dr = cfg.mla.kv_lora_rank, cfg.mla.rope_head_dim
+            return {"ckv": jnp.zeros((cfg.n_layers, batch, s_max, r), dtype),
+                    "kpe": jnp.zeros((cfg.n_layers, batch, 1, s_max, dr), dtype)}
+        return kv_cache(cfg.n_layers, s_max)
+
+    # ---- trunk -----------------------------------------------------------------
+    def _embed_inputs(self, params, batch_inputs, positions):
+        cfg = self.cfg
+        tokens = batch_inputs["tokens"]
+        x = embed(params["embed"], tokens).astype(jnp.bfloat16)
+        if cfg.frontend == "vision" and "patch_embeds" in batch_inputs:
+            pe = dense(batch_inputs["patch_embeds"].astype(x.dtype),
+                       params["frontend"]["w"], params["frontend"]["b"])
+            n = min(pe.shape[1], x.shape[1])
+            x = jnp.concatenate([pe[:, :n], x[:, n:]], axis=1)
+        if cfg.encdec is not None:
+            x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)[None]
+        return shard(x, "batch", None, "embed")
+
+    def _encoder(self, params, frames):
+        """whisper encoder: frames (B, n_enc, d_front) -> (B, n_enc, d)."""
+        cfg = self.cfg
+        x = dense(frames.astype(jnp.bfloat16), params["frontend"]["w"], params["frontend"]["b"])
+        pos = jnp.arange(x.shape[1])
+        x = x + sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)[None]
+
+        def body(x, layer_params):
+            return blocks.apply_whisper_enc_layer(layer_params, x, cfg, impl=self._impl(x.shape[1])), ()
+
+        fn = _remat(cfg, body)
+        x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+        return layer_norm(x, params["enc_norm"], params["enc_norm_b"], cfg.norm_eps)
+
+    def _impl(self, s: int) -> str:
+        if s <= 1024:
+            return "full"
+        return getattr(self.cfg, "attn_impl", "chunked")
+
+    def _trunk(self, params, x, positions, cache=None, cache_index=None,
+               enc_out=None, impl=None):
+        """Run the layer stack. Returns (x, new_cache, aux_sum)."""
+        cfg = self.cfg
+        impl = impl or self._impl(x.shape[1])
+
+        # ---------- rwkv ----------
+        if cfg.rwkv is not None:
+            def body(carry, xs):
+                x, aux = carry
+                lp, c = xs if cache is not None else (xs, None)
+                x, nc, a = blocks.apply_rwkv_layer(lp, x, cfg, cache=c, cache_index=cache_index)
+                return (x, aux + a), nc
+            fn = _remat(cfg, body)
+            xs = (params["layers"], cache) if cache is not None else params["layers"]
+            (x, aux), new_cache = jax.lax.scan(fn, (x, ZERO), xs)
+            return x, new_cache, aux
+
+        # ---------- zamba2 (mamba superblocks + shared attention) ----------
+        if cfg.ssm is not None:
+            shared = params["shared_attn"]
+
+            def mamba_body(carry, xs):
+                x, aux = carry
+                lp, c = xs if cache is not None else (xs, None)
+                x, nc, a = blocks.apply_mamba_layer(lp, x, cfg, cache=c, cache_index=cache_index)
+                return (x, aux + a), nc
+            mamba_fn = _remat(cfg, mamba_body)
+
+            def super_body(carry, xs):
+                x, aux = carry
+                if cache is not None:
+                    lp, mc, ac = xs
+                    (x, aux), nmc = jax.lax.scan(mamba_fn, (x, aux), (lp, mc))
+                else:
+                    lp = xs
+                    (x, aux), nmc = jax.lax.scan(mamba_fn, (x, aux), lp)
+                    ac = None
+                x, nac, a = blocks.apply_dense_layer(shared, x, cfg, positions=positions,
+                                                     impl=impl, cache=ac, cache_index=cache_index)
+                return (x, aux + a), ((nmc, nac) if cache is not None else nmc)
+
+            super_fn = _remat(cfg, super_body)
+            if cache is not None:
+                xs = (params["mamba_main"], cache["mamba_main"], cache["attn"])
+            else:
+                xs = params["mamba_main"]
+            (x, aux), ys = jax.lax.scan(super_fn, (x, ZERO), xs)
+            new_cache = {}
+            if cache is not None:
+                new_cache["mamba_main"], new_cache["attn"] = ys
+            if "mamba_tail" in params:
+                if cache is not None:
+                    (x, aux), ntc = jax.lax.scan(
+                        mamba_fn, (x, aux), (params["mamba_tail"], cache["mamba_tail"]))
+                    new_cache["mamba_tail"] = ntc
+                else:
+                    (x, aux), _ = jax.lax.scan(mamba_fn, (x, aux), params["mamba_tail"])
+            return x, (new_cache if cache is not None else None), aux
+
+        # ---------- whisper decoder ----------
+        if cfg.encdec is not None:
+            def body(carry, xs):
+                x, aux = carry
+                if cache is not None:
+                    lp, sc, xc = xs
+                    ck, cv = xc["k"], xc["v"]
+                else:
+                    lp, (ck, cv) = xs
+                    sc = None
+                x, nsc, a = blocks.apply_whisper_dec_layer(
+                    lp, x, cfg, positions=positions, impl=impl,
+                    cache=sc, cache_index=cache_index, cross_kv=(ck, cv))
+                return (x, aux + a), nsc
+            fn = _remat(cfg, body)
+
+            if cache is not None:
+                xs = (params["dec_layers"], cache["self"], cache["cross"])
+            else:
+                # compute per-layer cross K/V from enc_out on the fly
+                ck, cv = self._cross_kv(params["dec_layers"], enc_out)
+                xs = (params["dec_layers"], (ck, cv))
+            (x, aux), nsc = jax.lax.scan(fn, (x, ZERO), xs)
+            if cache is not None:
+                new_cache = {"self": nsc, "cross": cache["cross"],
+                             "has_cross": cache["has_cross"]}
+                return x, new_cache, aux
+            return x, None, aux
+
+        # ---------- homogeneous attention stacks ----------
+        if cfg.mla is not None:
+            apply = blocks.apply_mla_layer
+        elif cfg.moe is not None:
+            apply = blocks.apply_moe_layer
+        else:
+            apply = blocks.apply_dense_layer
+
+        if "layer0" in params:  # deepseek first dense layer
+            c0 = jax.tree.map(lambda a: a[0], cache) if cache is not None else None
+            x, nc0, a0 = blocks.apply_mla_layer(params["layer0"], x, cfg,
+                                                positions=positions, impl=impl,
+                                                cache=c0, cache_index=cache_index)
+        else:
+            nc0, a0 = None, ZERO
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, c = xs if cache is not None else (xs, None)
+            x, nc, a = apply(lp, x, cfg, positions=positions, impl=impl,
+                             cache=c, cache_index=cache_index)
+            return (x, aux + a), nc
+        fn = _remat(cfg, body)
+
+        if cache is not None:
+            rest = jax.tree.map(lambda a: a[1:], cache) if "layer0" in params else cache
+            xs = (params["layers"], rest)
+        else:
+            xs = params["layers"]
+        (x, aux), ncs = jax.lax.scan(fn, (x, a0), xs)
+        new_cache = None
+        if cache is not None:
+            if "layer0" in params:
+                new_cache = jax.tree.map(
+                    lambda first, rest: jnp.concatenate([first[None], rest], axis=0),
+                    nc0, ncs)
+            else:
+                new_cache = ncs
+        return x, new_cache, aux
+
+    def _cross_kv(self, dec_layers, enc_out):
+        """Per-layer cross K,V from encoder output: (L,B,KV,S_enc,dh)."""
+        cfg = self.cfg
+
+        def one(lp):
+            k = dense(enc_out, lp["cross"]["wk"], lp["cross"].get("bk"))
+            v = dense(enc_out, lp["cross"]["wv"], lp["cross"].get("bv"))
+            b, s, _ = k.shape
+            k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+            v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+            return k, v
+
+        return jax.vmap(one)(dec_layers)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps) if cfg.encdec is None else \
+            layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            return unembed({}, x, table=params["embed"]["table"])
+        return unembed(params["head"], x)
+
+    # ---- public API ----------------------------------------------------------
+    def train_loss(self, params, batch) -> tuple[jax.Array, dict]:
+        """batch: tokens (B, S+1) [+ patch_embeds / frames]. CE + MoE aux."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"][:, :-1], batch["tokens"][:, 1:]
+        positions = jnp.arange(tokens.shape[1])
+        x = self._embed_inputs(params, {**batch, "tokens": tokens}, positions)
+        enc_out = None
+        if cfg.encdec is not None:
+            enc_out = self._encoder(params, batch["frames"])
+        x, _, aux = self._trunk(params, x, positions, enc_out=enc_out)
+        logits = self._logits(params, x)
+        from ..runtime.pspec import current_rules
+        from .vocab_parallel import vp_cross_entropy
+        rules = current_rules()
+        batch_axes = rules.resolve("batch") if rules is not None else None
+        ce = vp_cross_entropy(logits, labels, cfg.vocab_size, batch_axes or None)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch, cache):
+        """Process a full prompt, fill the cache, return last-position logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        positions = jnp.arange(tokens.shape[1])
+        x = self._embed_inputs(params, batch, positions)
+        if cfg.encdec is not None:
+            enc_out = self._encoder(params, batch["frames"])
+            ck, cv = self._cross_kv(params["dec_layers"], enc_out)
+            cache = {**cache, "cross": {"k": ck.astype(cache["cross"]["k"].dtype),
+                                        "v": cv.astype(cache["cross"]["v"].dtype)},
+                     "has_cross": jnp.ones((), jnp.int32)}
+        x, new_cache, _ = self._trunk(params, x, positions, cache=cache, cache_index=None)
+        logits = self._logits(params, x[:, -1:])
+        return logits, new_cache
+
+    def decode_step(self, params, tokens, cache, cache_index):
+        """tokens (B,1); cache_index: int32 scalar position of this token."""
+        cfg = self.cfg
+        positions = jnp.full((1,), cache_index, jnp.int32)
+        x = self._embed_inputs(params, {"tokens": tokens}, positions)
+        x, new_cache, _ = self._trunk(params, x, positions, cache=cache,
+                                      cache_index=cache_index)
+        logits = self._logits(params, x)
+        return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (for MODEL_FLOPS = 6 N D)
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg) -> Params:
+    model = Model(cfg)
+    return jax.eval_shape(lambda: model.init_params(jax.random.key(0)))
+
+
+def count_params(cfg) -> int:
+    shapes = param_shapes(cfg)
+    return sum(int(math.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+def count_active_params(cfg) -> int:
+    """Active params per token (MoE: routed experts scaled by top_k/E)."""
+    shapes = param_shapes(cfg)
+    total = 0
+    def walk(tree, path):
+        nonlocal total
+        if hasattr(tree, "shape"):
+            n = int(math.prod(tree.shape))
+            if "experts" in path and cfg.moe is not None:
+                e = cfg.moe.n_routed_padded or cfg.moe.n_routed
+                n = int(n * cfg.moe.top_k / e)
+            total += n
+            return
+        for k, v in tree.items():
+            walk(v, path + (k,))
+    walk(shapes, ())
+    return total

@@ -1,0 +1,214 @@
+"""RWKV6 ("Finch") block: token-shift mixing + data-dependent-decay WKV.
+
+Recurrence per head (state S in R^{dh x dh}):
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(wraw_t))
+
+Chunked closed form (chunk Q): all decay exponents are differences of the
+cumulative log-decay along time and hence <= 0 — numerically safe in fp32
+(DESIGN.md). Intra-chunk uses an explicit (Q, Q, dh) per-channel decay
+tensor (exact, memory O(Q^2 dh) per head-block); the Pallas kernel
+(kernels/rwkv6_scan.py) implements the factored fast form for TPU.
+
+The 'Finch' signature: w_t is data-dependent through a low-rank MLP.
+Heads are padded to a multiple of the mesh model-axis (40 -> 48 for
+rwkv6-3b); padding heads have zero projections (DESIGN.md §5).
+
+Decode cache = {'shift_tm','shift_cm': (B,1,d), 'state': (B,H,dh,dh)}.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.pspec import shard
+from .layers import Params, dense, he_init
+
+
+def _dims(cfg):
+    dh = cfg.rwkv.head_dim
+    nh = cfg.n_heads  # already the wkv head count (d_model/dh, possibly padded)
+    dk = nh * dh      # wkv width (>= d_model when heads are padded)
+    return nh, dh, dk
+
+
+def init_rwkv6(key, cfg, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    nh, dh, dk = _dims(cfg)
+    lora = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 10)
+    return {
+        "tm": {  # time mix
+            "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+            "mu_v": jnp.full((d,), 0.5, dtype), "mu_g": jnp.full((d,), 0.5, dtype),
+            "mu_w": jnp.full((d,), 0.5, dtype),
+            "wr": he_init(ks[0], (d, dk), d, dtype),
+            "wk": he_init(ks[1], (d, dk), d, dtype),
+            "wv": he_init(ks[2], (d, dk), d, dtype),
+            "wg": he_init(ks[3], (d, dk), d, dtype),
+            "wo": he_init(ks[4], (dk, d), dk, dtype),
+            "w_base": jnp.full((dk,), -0.6, dtype),   # decay bias (pre -exp(.))
+            "w_lora_a": he_init(ks[5], (d, lora), d, dtype),
+            "w_lora_b": jnp.zeros((lora, dk), dtype),
+            "u": jnp.zeros((nh, dh), dtype),          # bonus
+            "ln_x": jnp.ones((dk,), dtype),           # per-head group norm
+        },
+        "cm": {  # channel mix
+            "mu_k": jnp.full((d,), 0.5, dtype), "mu_r": jnp.full((d,), 0.5, dtype),
+            "wk": he_init(ks[6], (d, cfg.d_ff), d, dtype),
+            "wv": he_init(ks[7], (cfg.d_ff, d), cfg.d_ff, dtype),
+            "wr": he_init(ks[8], (d, d), d, dtype),
+        },
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,1,d) last token of the previous segment."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _group_norm(y, scale, nh, dh, eps=1e-5):
+    """Per-head LayerNorm over dh (RWKV ln_x)."""
+    b, s, _ = y.shape
+    yh = y.reshape(b, s, nh, dh).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = ((yh - mu) ** 2).mean(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(b, s, nh * dh) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk):
+    """r,k,v: (B,H,S,dh); logw: (B,H,S,dh) (<= 0); u: (H,dh) bonus.
+
+    Returns (B,H,S,dh) outputs and the final state (B,H,dh,dh).
+    """
+    b, h, s, dh = r.shape
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    rc = r.reshape(b, h, nc, q, dh)
+    kc = k.reshape(b, h, nc, q, dh)
+    vc = v.reshape(b, h, nc, q, dh)
+    lw = logw.reshape(b, h, nc, q, dh).astype(jnp.float32)
+    cum = jnp.cumsum(lw, axis=3)  # inclusive cumulative log decay
+
+    def step(state, inp):
+        r_i, k_i, v_i, cum_i = inp  # (B,H,Q,dh) each
+        # intra: A[t,s'] = sum_c r[t,c] k[s',c] exp(cum[t-1,c] - cum[s',c]), s' < t
+        cum_tm1 = jnp.pad(cum_i[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0)))  # cum_{t-1}, cum_{-1}=0
+        diff = cum_tm1[:, :, :, None, :] - cum_i[:, :, None, :, :]  # (B,H,Q,Q,dh)
+        tri = (jnp.arange(q)[:, None] > jnp.arange(q)[None, :])[None, None, :, :, None]
+        gate = jnp.where(tri, jnp.exp(diff), 0.0)
+        A = jnp.einsum("bhtc,bhsc,bhtsc->bhts", r_i, k_i, gate)
+        # diagonal bonus u
+        diag = jnp.einsum("bhtc,bhtc->bht", r_i * u[None, :, None, :], k_i)
+        y = jnp.einsum("bhts,bhsd->bhtd", A, v_i)
+        y = y + diag[..., None] * v_i
+        # inter: state contribution decayed to t-1
+        y = y + jnp.einsum("bhtc,bhcd->bhtd", r_i * jnp.exp(cum_tm1), state)
+        # state update: S' = diag(exp(cum_Q)) S + sum_s exp(cum_Q - cum_s) k_s v_s^T
+        wq = jnp.exp(cum_i[:, :, -1:, :] - cum_i)          # (B,H,Q,dh)
+        upd = jnp.einsum("bhsc,bhsd->bhcd", k_i * wq, v_i)
+        state = state * jnp.exp(cum_i[:, :, -1, :])[..., None] + upd
+        return state, y
+
+    state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    inputs = (
+        rc.transpose(2, 0, 1, 3, 4).astype(jnp.float32),
+        kc.transpose(2, 0, 1, 3, 4).astype(jnp.float32),
+        vc.transpose(2, 0, 1, 3, 4).astype(jnp.float32),
+        cum.transpose(2, 0, 1, 3, 4),
+    )
+    final, ys = jax.lax.scan(jax.checkpoint(step), state0, inputs)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dh)
+    return y, final
+
+
+def rwkv6_time_mix(params: Params, x: jax.Array, cfg: Any, *,
+                   cache: Params | None = None, cache_index=None):
+    nh, dh, dk = _dims(cfg)
+    b, s, d = x.shape
+    p = params["tm"]
+
+    prev = cache["shift_tm"].astype(x.dtype) if cache is not None else jnp.zeros((b, 1, d), x.dtype)
+    xs = _token_shift(x, prev) if s > 1 else prev  # decode: shift = cached last token
+    if s == 1 and cache is None:
+        xs = jnp.zeros_like(x)
+
+    r = dense(_mix(x, xs, p["mu_r"]), p["wr"])
+    k = dense(_mix(x, xs, p["mu_k"]), p["wk"])
+    v = dense(_mix(x, xs, p["mu_v"]), p["wv"])
+    g = dense(_mix(x, xs, p["mu_g"]), p["wg"])
+    # Finch data-dependent decay (low-rank)
+    wraw = dense(_mix(x, xs, p["mu_w"]), p["w_lora_a"])
+    wraw = dense(jnp.tanh(wraw), p["w_lora_b"]) + p["w_base"].astype(x.dtype)
+    # clamp: per-step decay saturates at e^-30 (~1e-13, i.e. a full reset);
+    # unbounded logw magnitudes destroy the chunked form's fp32 cumsum.
+    logw = -jnp.exp(jnp.minimum(wraw.astype(jnp.float32), 3.4))  # in [-30, 0]
+
+    def heads(t):  # (B,S,dk) -> (B,H,S,dh)
+        return t.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+
+    r_h, k_h, v_h = heads(r), heads(k), heads(v)
+    r_h = shard(r_h, "batch", "heads", None, None)
+    k_h = shard(k_h, "batch", "heads", None, None)
+    v_h = shard(v_h, "batch", "heads", None, None)
+    logw_h = heads(logw)
+
+    if cache is not None and cache_index is not None and s == 1:
+        state = cache["state"].astype(jnp.float32)  # (B,H,dh,dh)
+        r1 = r_h[:, :, 0].astype(jnp.float32)
+        k1 = k_h[:, :, 0].astype(jnp.float32)
+        v1 = v_h[:, :, 0].astype(jnp.float32)
+        u = params["tm"]["u"].astype(jnp.float32)
+        y = jnp.einsum("bhc,bhcd->bhd", r1, state) \
+            + jnp.einsum("bhc,bhc,bhd->bhd", r1 * u[None], k1, v1)
+        w1 = jnp.exp(logw_h[:, :, 0])
+        state = state * w1[..., None] + k1[..., :, None] * v1[..., None, :]
+        y = y.reshape(b, 1, dk).astype(x.dtype)
+        new_cache = {"shift_tm": x, "state": state.astype(cache["state"].dtype)}
+    else:
+        yh, final = _wkv_chunked(r_h, k_h, v_h, logw_h,
+                                 params["tm"]["u"].astype(jnp.float32), cfg.rwkv.chunk)
+        y = yh.transpose(0, 2, 1, 3).reshape(b, s, dk).astype(x.dtype)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"shift_tm": x[:, -1:], "state": final.astype(cache["state"].dtype)}
+
+    y = _group_norm(y, p["ln_x"], nh, dh)
+    y = y * jax.nn.silu(g)
+    out = dense(y, p["wo"])
+    return shard(out, "batch", None, "embed"), new_cache
+
+
+def rwkv6_channel_mix(params: Params, x: jax.Array, *, cache=None):
+    p = params["cm"]
+    b, s, d = x.shape
+    prev = cache["shift_cm"].astype(x.dtype) if cache is not None else jnp.zeros((b, 1, d), x.dtype)
+    xs = _token_shift(x, prev) if s > 1 else prev
+    if s == 1 and cache is None:
+        xs = jnp.zeros_like(x)
+    k = dense(_mix(x, xs, p["mu_k"]), p["wk"])
+    k = shard(k, "batch", None, "ffn")
+    k = jnp.square(jax.nn.relu(k))
+    kv = dense(k, p["wv"])
+    r = jax.nn.sigmoid(dense(_mix(x, xs, p["mu_r"]), p["wr"]))
+    new_cache = {"shift_cm": x[:, -1:]} if cache is not None else None
+    return shard(r * kv, "batch", None, "embed"), new_cache
+
+
+def init_rwkv6_cache(cfg, batch: int, dtype=jnp.bfloat16) -> Params:
+    nh, dh, dk = _dims(cfg)
+    return {
+        "shift_tm": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "state": jnp.zeros((batch, nh, dh, dh), dtype),
+    }

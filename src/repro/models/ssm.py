@@ -1,0 +1,164 @@
+"""Mamba2 (SSD) block: chunked state-space duality implementation.
+
+Within a chunk (length Q) the recurrence is computed as masked quadratic
+attention with scalar-per-head decays; across chunks a lax.scan carries the
+(B, H, dh, N) state. All decay exponents are differences of a cumulative sum
+along time and therefore <= 0 — numerically safe without clamping
+(DESIGN.md; same argument as the RWKV6 chunk form).
+
+Decode is the O(1) recurrent update: state <- exp(dt*A) * state + dt*B x.
+Cache = {'conv': (B, W-1, d_conv_in), 'state': (B, H, dh, N)}.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.pspec import shard
+from .layers import Params, dense, he_init
+
+
+def _dims(cfg):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    return d_inner, n_heads, ssm.d_state, ssm.head_dim, ssm.conv_width
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    di, nh, n, dh, w = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_conv_in = di + 2 * n  # x, B, C share the causal conv
+    return {
+        "in_proj": he_init(ks[0], (d, 2 * di + 2 * n + nh), d, dtype),
+        "conv_w": he_init(ks[1], (w, d_conv_in), w, dtype),
+        "conv_b": jnp.zeros((d_conv_in,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),          # A = -exp(A_log)
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": he_init(ks[2], (di, d), di, dtype),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    di, nh, n, dh, w = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _gated_norm(x, z, scale, eps):
+    """Mamba2 RMSNorm(x * silu(z))."""
+    y = x * jax.nn.silu(z)
+    dt = y.dtype
+    y = y.astype(jnp.float32)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def mamba2_block(params: Params, x: jax.Array, cfg: Any, *,
+                 cache: Params | None = None, cache_index=None):
+    """x: (B,S,d) -> (y, new_cache)."""
+    di, nh, n, dh, w = _dims(cfg)
+    b, s, d = x.shape
+    zxbcdt = dense(x, params["in_proj"])
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,S,nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                                     # (nh,)
+
+    conv_w = params["conv_w"].astype(x.dtype)   # (W, C)
+    conv_b = params["conv_b"].astype(x.dtype)
+
+    if cache is not None and cache_index is not None and s == 1:
+        # ---- decode: O(1) update ------------------------------------------------
+        conv_state = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)  # (B,W,C)
+        xbc_t = (conv_state * conv_w[None]).sum(1) + conv_b          # (B,C)
+        xbc_t = jax.nn.silu(xbc_t)
+        xh = xbc_t[..., :di].reshape(b, nh, dh)
+        Bv = xbc_t[..., di : di + n]
+        Cv = xbc_t[..., di + n :]
+        dt_t = dt[:, 0]                                              # (B,nh)
+        dA = jnp.exp(dt_t * A[None, :])                              # (B,nh)
+        upd = (dt_t[..., None, None] * xh[..., :, None]) * Bv[:, None, None, :]
+        state = cache["state"].astype(jnp.float32) * dA[..., None, None] + upd
+        y = jnp.einsum("bhdn,bn->bhd", state, Cv.astype(jnp.float32))
+        y = y + params["D"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, 1, di).astype(x.dtype)
+        new_cache = {"conv": conv_state[:, 1:].astype(cache["conv"].dtype),
+                     "state": state.astype(cache["state"].dtype)}
+    else:
+        # ---- train/prefill: causal conv + chunked SSD ---------------------------
+        pad = jnp.zeros((b, w - 1, xbc.shape[-1]), xbc.dtype)
+        xbc_p = jnp.concatenate([pad, xbc], axis=1)
+        xbc_c = sum(xbc_p[:, i : i + s] * conv_w[i][None, None] for i in range(w)) + conv_b
+        xbc_c = jax.nn.silu(xbc_c)
+        xh = xbc_c[..., :di].reshape(b, s, nh, dh)
+        Bv = xbc_c[..., di : di + n]            # (B,S,n)
+        Cv = xbc_c[..., di + n :]               # (B,S,n)
+
+        q = cfg.ssm.chunk
+        q = min(q, s)
+        assert s % q == 0, (s, q)
+        nc = s // q
+        xh_c = xh.reshape(b, nc, q, nh, dh)
+        B_c = Bv.reshape(b, nc, q, n)
+        C_c = Cv.reshape(b, nc, q, n)
+        dt_c = dt.reshape(b, nc, q, nh)
+        dA_c = dt_c * A[None, None, None, :]    # (B,nc,Q,nh) log-decay per step (<=0)
+        cums = jnp.cumsum(dA_c, axis=2)         # (B,nc,Q,nh) inclusive
+
+        def chunk_step(state, inputs):
+            xh_i, B_i, C_i, dt_i, cum_i = inputs
+            # intra-chunk: A[t,s'] = exp(cum_t - cum_s') for s' <= t (exponent <= 0)
+            diff = cum_i[:, :, None, :] - cum_i[:, None, :, :]         # (B,Q,Q,nh)
+            mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, :, :, None]
+            gate = jnp.where(mask, jnp.exp(diff), 0.0)
+            scores = jnp.einsum("btn,bsn->bts", C_i, B_i)[..., None] * gate  # (B,Q,Q,nh)
+            y_intra = jnp.einsum("btsh,bsh,bshd->bthd", scores, dt_i, xh_i)
+            # inter-chunk: carry-in state contribution, decayed to each t
+            y_inter = jnp.einsum("btn,bhdn->bthd", C_i, state) * jnp.exp(cum_i)[..., None]
+            # state' = exp(cum_Q) * state + sum_s exp(cum_Q - cum_s) dt_s B_s x_s
+            decay_chunk = jnp.exp(cum_i[:, -1, :])                      # (B,nh)
+            w_s = jnp.exp(cum_i[:, -1:, :] - cum_i)                     # (B,Q,nh)
+            upd = jnp.einsum("bsh,bsh,bshd,bsn->bhdn", w_s, dt_i, xh_i, B_i)
+            new_state = state * decay_chunk[..., None, None] + upd
+            return new_state, y_intra + y_inter
+
+        state0 = jnp.zeros((b, nh, dh, n), jnp.float32)
+        inputs = (
+            xh_c.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+            B_c.transpose(1, 0, 2, 3).astype(jnp.float32),
+            C_c.transpose(1, 0, 2, 3).astype(jnp.float32),
+            dt_c.transpose(1, 0, 2, 3),
+            cums.transpose(1, 0, 2, 3),
+        )
+        final_state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state0, inputs)
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, dh)
+        y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, s, di).astype(x.dtype)
+        if cache is not None:
+            new_cache = {
+                "conv": xbc[:, s - (w - 1):, :].astype(cache["conv"].dtype) if s >= w - 1
+                        else jnp.concatenate([cache["conv"], xbc], 1)[:, -(w - 1):],
+                "state": final_state.astype(cache["state"].dtype),
+            }
+        else:
+            new_cache = None
+
+    y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
+    out = dense(y, params["out_proj"])
+    return shard(out, "batch", None, "embed"), new_cache
+
+
+def init_mamba2_cache(cfg, batch: int, dtype=jnp.bfloat16) -> Params:
+    di, nh, n, dh, w = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, w - 1, di + 2 * n), dtype),
+        "state": jnp.zeros((batch, nh, dh, n), dtype),
+    }

@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, apply_updates, init_opt_state, lr_schedule
+
+__all__ = ["AdamWConfig", "apply_updates", "init_opt_state", "lr_schedule"]

@@ -1,0 +1,13 @@
+from .pspec import axis_rules, logical_spec, named_sharding, shard
+from .mesh_rules import (ShardingPolicy, make_policy, param_pspec_tree,
+                         cache_pspec_tree)
+from .steps import (TrainState, build_decode_step, build_prefill_step,
+                    build_train_step, init_train_state)
+from . import fault
+
+__all__ = [
+    "axis_rules", "logical_spec", "named_sharding", "shard",
+    "ShardingPolicy", "make_policy", "param_pspec_tree", "cache_pspec_tree",
+    "TrainState", "build_train_step", "build_prefill_step",
+    "build_decode_step", "init_train_state", "fault",
+]

@@ -1,0 +1,244 @@
+"""Sharding policy: logical-axis rules per (arch, mesh) + param spec trees.
+
+DESIGN.md §5. The rule set adapts to the architecture: head-count divisible
+by the model axis -> heads sharded; otherwise attention is replicated over
+'model' at baseline ('seq_shard_attention' flips those archs to
+sequence-sharded attention in the §Perf hillclimb).
+
+Param specs are derived from leaf paths by pattern (Megatron-style):
+
+  embedding table (V,d)      -> (vocab='model', fsdp='data')
+  attn wq/wk/wv (d, H*dh)    -> (fsdp, heads-flat) = ('data','model'|None)
+  attn wo (H*dh, d)          -> ('model'|None, 'data')
+  mlp wi (d, 2f)/wo (f, d)   -> ('data','model') / ('model','data')
+  router (d, E)              -> replicated
+  experts wi (E,d,f)         -> ('model', 'data', None)  [EP + FSDP]
+  experts wo (E,f,d)         -> ('model', None, 'data')
+  mamba/rwkv projections     -> ('data','model') like mlp
+  scalars / norms / biases   -> replicated
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingPolicy", "make_policy", "param_pspec_tree", "batch_specs",
+           "cache_pspec_tree"]
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Resolved logical-axis mapping for one (arch, mesh, shape) cell."""
+
+    mesh: Mesh
+    batch_axes: tuple[str, ...]          # ('pod','data') or ('data',)
+    shard_heads: bool                    # H % model_axis == 0
+    shard_kv_heads: bool                 # KV % model_axis == 0
+    seq_shard_attention: bool = False    # §Perf variant
+    kv_seq_axes: tuple[str, ...] | None = None  # long-context decode cache
+
+    def rules(self) -> dict:
+        model = "model"
+        return {
+            "batch": self.batch_axes or None,
+            "embed": None,
+            "ffn": model,
+            "vocab": model,
+            "experts": model,
+            "heads": model if self.shard_heads else None,
+            "kv_heads": model if self.shard_kv_heads else None,
+            "seq": model if self.seq_shard_attention else None,
+            "kv_seq": self.kv_seq_axes,
+            "fsdp": "data",
+        }
+
+
+def make_policy(cfg, mesh: Mesh, shape_kind: str = "train",
+                seq_shard_attention: bool = False,
+                long_context: bool = False) -> ShardingPolicy:
+    n_model = mesh.shape["model"]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    shard_heads = cfg.n_heads % n_model == 0
+    shard_kv = cfg.n_kv_heads % n_model == 0 and shard_heads
+    kv_seq = ("data",) if long_context else None
+    return ShardingPolicy(
+        mesh=mesh, batch_axes=batch_axes, shard_heads=shard_heads,
+        shard_kv_heads=shard_kv, seq_shard_attention=seq_shard_attention,
+        kv_seq_axes=kv_seq,
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter spec tree
+# ---------------------------------------------------------------------------
+
+_MODEL = "model"
+_FSDP = "data"
+
+
+def _spec_for(path: tuple[str, ...], shape: tuple[int, ...], policy: ShardingPolicy):
+    """PartitionSpec for one param leaf, by name pattern + divisibility."""
+    name = path[-1]
+    joined = "/".join(path)
+    mesh = policy.mesh
+    n_model = mesh.shape["model"]
+    n_data = mesh.shape["data"]
+
+    def ok(dim, n):  # divisible -> shardable
+        return dim % n == 0
+
+    def fsdp_largest(spec):
+        """Add FSDP ('data') on the largest unsharded dim if divisible."""
+        dims = [(d, i) for i, d in enumerate(shape) if spec[i] is None]
+        for d, i in sorted(dims, reverse=True):
+            if ok(d, n_data):
+                spec = list(spec)
+                spec[i] = _FSDP
+                return tuple(spec)
+        return spec
+
+    spec = [None] * len(shape)
+
+    if "experts" in path:  # (E, d, f) / (E, f, d): EP over model + FSDP
+        if ok(shape[0], n_model):
+            spec[0] = _MODEL
+        spec = tuple(spec)
+        return P(*fsdp_largest(spec))
+
+    if name in ("table",):  # embedding (V, d)
+        if ok(shape[0], n_model):
+            spec[0] = _MODEL
+        if ok(shape[1], n_data):
+            spec[1] = _FSDP
+        return P(*spec)
+
+    if name == "w" and "head" in path:  # lm head (d, V)
+        if ok(shape[1], n_model):
+            spec[1] = _MODEL
+        if ok(shape[0], n_data):
+            spec[0] = _FSDP
+        return P(*spec)
+
+    if len(shape) == 2:
+        d_in, d_out = shape
+        # column-parallel by default (TP on output), row-parallel for wo
+        row_parallel = name in ("wo", "out_proj", "wv") and "cm" not in path \
+            or (name == "wo" and True)
+        # attention projections of archs with non-divisible heads stay
+        # replicated on the head dim but still FSDP on d_in.
+        tp_ok_out = ok(d_out, n_model)
+        tp_ok_in = ok(d_in, n_model)
+        if name in ("wo", "out_proj") or (path[-2:] == ("cm", "wv")) or name == "wv" and "cm" in path:
+            if tp_ok_in:
+                spec[0] = _MODEL
+            if ok(d_out, n_data):
+                spec[1] = _FSDP
+        else:
+            if tp_ok_out:
+                spec[1] = _MODEL
+            if ok(d_in, n_data):
+                spec[0] = _FSDP
+        return P(*spec)
+
+    if len(shape) == 3:  # stacked-layer 2D params handled below via strip
+        pass
+    return P(*spec)  # 0/1-D (norms, biases, scalars): replicated
+
+
+def param_pspec_tree(param_shapes, policy: ShardingPolicy, stacked_prefixes=("layers", "mamba_main", "mamba_tail", "enc_layers", "dec_layers")):
+    """Build a PartitionSpec tree parallel to the param tree.
+
+    Stacked-layer params have 1-2 leading layer dims (replicated); the spec
+    for the trailing dims comes from the 2-D rule on the stripped shape.
+    """
+
+    def walk(tree, path):
+        if hasattr(tree, "shape"):
+            shape = tuple(tree.shape)
+            n_lead = 0
+            if any(p in stacked_prefixes for p in path):
+                n_lead = 2 if "mamba_main" in path else 1
+            core = shape[n_lead:]
+            spec = _spec_for(path, core, policy)
+            full = P(*([None] * n_lead + list(spec)))
+            return full
+        return {k: walk(v, path + (k,)) for k, v in tree.items()}
+
+    return walk(param_shapes, ())
+
+
+# ---------------------------------------------------------------------------
+# batch + cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg, policy: ShardingPolicy, batch_fields) -> dict:
+    b = policy.batch_axes
+    specs = {}
+    for name, ndim in batch_fields.items():
+        specs[name] = P(b, *([None] * (ndim - 1)))
+    return specs
+
+
+def cache_pspec_tree(cache_shapes, cfg, policy: ShardingPolicy):
+    """KV/SSM cache specs: batch over batch_axes (when divisible), kv heads
+    over model when shardable; long-context: cache seq over 'data'."""
+    mesh = policy.mesh
+    b_axes = policy.batch_axes
+    n_b = int(np.prod([mesh.shape[a] for a in b_axes]))
+    kv_ok = policy.shard_kv_heads
+    n_model = mesh.shape["model"]
+
+    def walk(tree, path):
+        if hasattr(tree, "shape"):
+            shape = tuple(tree.shape)
+            name = path[-1]
+            spec = [None] * len(shape)
+            # layout: (L, B, KV, S, dh) / (L, B, S, r) / (L[,ae], B, ...)
+            # find the batch dim: first dim equal to a plausible batch size
+            # (we know caches are built with leading layer dims then batch)
+            if name in ("k", "v"):
+                L_dims = len(shape) - 4
+                bi, kvi, si = L_dims, L_dims + 1, L_dims + 2
+                if shape[bi] % n_b == 0 and shape[bi] >= n_b:
+                    spec[bi] = b_axes
+                if policy.kv_seq_axes and shape[si] % np.prod([mesh.shape[a] for a in policy.kv_seq_axes]) == 0:
+                    spec[si] = policy.kv_seq_axes
+                elif kv_ok and shape[kvi] % n_model == 0:
+                    spec[kvi] = _MODEL
+            elif name in ("ckv", "kpe"):
+                bi = 1
+                if shape[bi] % n_b == 0 and shape[bi] >= n_b:
+                    spec[bi] = b_axes
+                if policy.kv_seq_axes:
+                    si = 2 if name == "ckv" else 3
+                    if shape[si] % np.prod([mesh.shape[a] for a in policy.kv_seq_axes]) == 0:
+                        spec[si] = policy.kv_seq_axes
+            elif name in ("conv", "state", "shift_tm", "shift_cm"):
+                L_dims = 2 if len(path) >= 2 and path[-2] == "mamba_main" else 1
+                # cache trees: {'mamba_main': {'conv': (nsb, ae, B, ...)}}
+                # plain: {'conv': (L, B, ...)}
+                bi = None
+                for i in range(len(shape)):
+                    if i >= 1:
+                        bi = i
+                        break
+                # batch dim = first dim after the leading layer dims
+                depth = 2 if "mamba_main" in path else 1
+                bi = depth
+                if len(shape) > bi and shape[bi] % n_b == 0 and shape[bi] >= n_b:
+                    spec[bi] = b_axes
+                if name == "state" and len(shape) > bi + 1:
+                    hi = bi + 1
+                    if kv_ok and shape[hi] % n_model == 0:
+                        spec[hi] = _MODEL
+            elif name == "has_cross":
+                pass
+            return P(*spec)
+        return {k: walk(v, path + (k,)) for k, v in tree.items()}
+
+    return walk(cache_shapes, ())

@@ -1,0 +1,106 @@
+"""Train / serve step builders: the units the launcher jits and the dry-run
+lowers.
+
+``build_train_step``  (state, batch) -> (state, metrics); AdamW, optional
+                      grad-accum microbatching (DLS-partitioned sizes,
+                      DESIGN.md §6.5) and int8 error-feedback compression.
+``build_prefill_step`` (params, batch, cache) -> (logits, cache)
+``build_decode_step``  (params, tokens, cache, index) -> (logits, cache)
+
+All builders operate under runtime.pspec axis rules installed by the caller
+(launch/dryrun.py or launch/train.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import TYPE_CHECKING, Any
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.adamw import AdamWConfig, apply_updates, init_opt_state
+from .pspec import shard
+
+if TYPE_CHECKING:  # avoid models <-> runtime import cycle
+    from ..models.model import Model
+
+__all__ = ["TrainState", "build_train_step", "build_prefill_step",
+           "build_decode_step", "init_train_state"]
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: Any
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def init_train_state(model: "Model", key, opt_cfg: AdamWConfig) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(params=params, opt=init_opt_state(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def build_train_step(model: "Model", opt_cfg: AdamWConfig, n_microbatches: int = 1,
+                     microbatch_sizes=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``n_microbatches > 1`` splits the batch and accumulates gradients with a
+    lax.scan (sizes uniform — SPMD requires static shapes; the DaphneSched
+    connection is at the host/data layer, DESIGN.md §6.5).
+    """
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        params = state.params
+
+        if n_microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            def mb(i, acc):
+                g_acc, l_acc = acc
+                sub = jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(
+                        a, i * (a.shape[0] // n_microbatches),
+                        a.shape[0] // n_microbatches, axis=0), batch)
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, sub)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l)
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, loss = jax.lax.fori_loop(0, n_microbatches, mb, (g0, 0.0))
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+
+        new_params, new_opt, opt_metrics = apply_updates(params, grads, state.opt, opt_cfg)
+        new_state = TrainState(params=new_params, opt=new_opt, step=state.step + 1)
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def build_prefill_step(model: "Model"):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def build_decode_step(model: "Model"):
+    def decode_step(params, tokens, cache, cache_index):
+        return model.decode_step(params, tokens, cache, cache_index)
+    return decode_step

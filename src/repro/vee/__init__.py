@@ -1,0 +1,10 @@
+"""Vectorized execution engine: data + operators -> tasks -> DaphneSched."""
+
+from .engine import VEE, PipelineResult
+from .sparse import CSRMatrix, rmat_graph, replicated_graph
+from .apps import connected_components, linear_regression, cc_step_numpy
+
+__all__ = [
+    "VEE", "PipelineResult", "CSRMatrix", "rmat_graph", "replicated_graph",
+    "connected_components", "linear_regression", "cc_step_numpy",
+]

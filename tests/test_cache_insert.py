@@ -1,0 +1,47 @@
+"""Property tests: the sharding-friendly cache_insert must be semantically
+identical to dynamic_update_slice (it replaced DUS because DUS on a
+seq-sharded cache forced an all-gather — EXPERIMENTS.md §Dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.attention import cache_insert
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    smax=st.integers(2, 24),
+    idx=st.integers(0, 23),
+    seed=st.integers(0, 5),
+)
+def test_single_token_insert_matches_dus(smax, idx, seed):
+    idx = idx % smax
+    rng = np.random.default_rng(seed)
+    cache = jnp.asarray(rng.normal(size=(2, 3, smax, 4)), jnp.float32)
+    new = jnp.asarray(rng.normal(size=(2, 3, 1, 4)), jnp.float32)
+    got = cache_insert(cache, new, jnp.int32(idx), axis=2)
+    want = jax.lax.dynamic_update_slice_in_dim(cache, new, idx, axis=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(smax=st.integers(1, 16), slen=st.integers(1, 16), seed=st.integers(0, 3))
+def test_prefix_insert_matches_dus(smax, slen, seed):
+    slen = min(slen, smax)
+    rng = np.random.default_rng(seed)
+    cache = jnp.asarray(rng.normal(size=(2, smax, 3)), jnp.float32)
+    new = jnp.asarray(rng.normal(size=(2, slen, 3)), jnp.float32)
+    got = cache_insert(cache, new, 0, axis=1)
+    want = jax.lax.dynamic_update_slice_in_dim(cache, new, 0, axis=1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_full_overwrite_short_circuits():
+    cache = jnp.zeros((2, 4, 3), jnp.bfloat16)
+    new = jnp.ones((2, 4, 3), jnp.float32)
+    got = cache_insert(cache, new, 0, axis=1)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got, np.float32), 1.0)

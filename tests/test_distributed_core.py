@@ -1,0 +1,112 @@
+"""Coordinator (distributed DaphneSched, paper Fig. 5) + device schedule."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Coordinator,
+    CoordinatorConfig,
+    assign_chunks,
+    build_task_table,
+    chunk_schedule,
+    cost_balanced_assignment,
+    per_shard_tables,
+    rebalance,
+)
+
+
+def _setup_coordinator(n_nodes=3):
+    cfg = CoordinatorConfig(n_nodes=n_nodes, node_workers=2, technique="FAC2",
+                            node_technique="GSS")
+    co = Coordinator(cfg)
+    x = np.arange(1000, dtype=np.float64)
+    co.broadcast("scale", np.array(2.0))
+
+    def program(store, start, size):
+        return (np.arange(start, start + size) * store["scale"]).sum()
+
+    co.ship_program(program)
+    return co
+
+
+def test_coordinator_divides_and_collects():
+    co = _setup_coordinator()
+    results = co.run(1000)
+    total = sum(results.values())
+    assert total == np.arange(1000).sum() * 2.0
+
+
+def test_coordinator_survives_node_failure():
+    co = _setup_coordinator(n_nodes=3)
+    co.kill_node(1)
+    results = co.run(1000)
+    assert sum(results.values()) == np.arange(1000).sum() * 2.0
+
+
+def test_coordinator_distribute_partitions_rows():
+    co = _setup_coordinator(n_nodes=2)
+    arr = np.arange(10).reshape(10, 1)
+    co.distribute("X", arr)
+    assert co.nodes[0].store["X"].shape[0] == 5
+    assert co.nodes[1].store["X"].shape[0] == 5
+
+
+# ---- device schedule (TPU adaptation) --------------------------------------
+
+def test_task_table_padding_and_coverage():
+    t = build_task_table("GSS", 1000, 8, max_chunks=64)
+    assert t.shape == (64, 2)
+    sizes = t[:, 1]
+    assert sizes.sum() == 1000
+    active = t[sizes > 0]
+    np.testing.assert_array_equal(active[1:, 0], (active[:, 0] + active[:, 1])[:-1])
+
+
+def test_assign_modes():
+    a = assign_chunks(10, 4, "roundrobin")
+    np.testing.assert_array_equal(a, [0, 1, 2, 3, 0, 1, 2, 3, 0, 1])
+    c = assign_chunks(10, 4, "contiguous")
+    np.testing.assert_array_equal(c, [0, 0, 0, 1, 1, 1, 2, 2, 2, 3])
+
+
+def test_per_shard_tables_cover_all_work():
+    table = build_task_table("FAC2", 777, 8)
+    table = table[table[:, 1] > 0]
+    assign = assign_chunks(len(table), 4, "roundrobin")
+    shard_tables = per_shard_tables(table, assign, 4)
+    assert shard_tables.shape[0] == 4
+    assert shard_tables[:, :, 1].sum() == 777
+
+
+def test_cost_balanced_beats_roundrobin_on_skew():
+    table = build_task_table("MFSC", 4096, 16)
+    table = table[table[:, 1] > 0]
+    rng = np.random.default_rng(0)
+    costs = rng.pareto(1.2, len(table)) + 0.1
+    rr = assign_chunks(len(table), 8, "roundrobin")
+    lpt = cost_balanced_assignment(table, costs, 8)
+
+    def max_load(assign):
+        return max(costs[assign == s].sum() for s in range(8))
+
+    assert max_load(lpt) <= max_load(rr)
+
+
+def test_rebalance_moves_work_toward_balance():
+    table = build_task_table("MFSC", 1024, 8)
+    table = table[table[:, 1] > 0]
+    n = len(table)
+    costs = np.ones(n)
+    # all chunks on shard 0: grossly imbalanced
+    assign = np.zeros(n, dtype=np.int32)
+    load = np.array([float(n)] + [0.0] * 7)
+    new_assign = rebalance(assign, load, costs, max_moves=n)
+    loads = np.array([costs[new_assign == s].sum() for s in range(8)])
+    assert loads.max() < n  # work moved off the hot shard
+    assert loads[0] > 0  # source keeps some work
+    # repeated application converges further
+    for _ in range(30):
+        load = np.array([costs[new_assign == s].sum() for s in range(8)])
+        new_assign = rebalance(new_assign, load, costs, max_moves=n)
+    load = np.array([costs[new_assign == s].sum() for s in range(8)])
+    assert load.max() <= np.ceil(n / 8) * 1.5

@@ -1,0 +1,130 @@
+"""Executor + queue + victim-selection behaviour tests.
+
+The critical invariant: every task executes exactly once under every
+(technique x layout x victim) combination — property-tested below.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    PARTITIONERS,
+    DistributedQueues,
+    RangeTask,
+    ScheduledExecutor,
+    SchedulerConfig,
+    chunk_schedule,
+    make_victim_selector,
+    tasks_from_schedule,
+)
+
+
+def _make_tasks(n_rows, technique="GSS", n_workers=4, seed=0):
+    data = np.arange(n_rows, dtype=np.int64)
+
+    def op(start, size):
+        return data[start : start + size].sum()
+
+    sched = chunk_schedule(technique, n_rows, n_workers, seed=seed)
+    return tasks_from_schedule(sched, op), data.sum()
+
+
+@pytest.mark.parametrize("technique", sorted(PARTITIONERS))
+@pytest.mark.parametrize("layout", ["CENTRALIZED", "PERCORE", "PERGROUP"])
+def test_all_combinations_execute_every_task(technique, layout):
+    tasks, expected = _make_tasks(400, technique)
+    cfg = SchedulerConfig(
+        technique=technique, queue_layout=layout, victim_strategy="RNDPRI",
+        n_workers=4, numa_domains=(0, 0, 1, 1), seed=1,
+    )
+    results, stats = ScheduledExecutor(cfg).run(tasks)
+    assert len(results) == len(tasks)
+    assert sum(results.values()) == expected
+
+
+@pytest.mark.parametrize("victim", ["SEQ", "SEQPRI", "RND", "RNDPRI"])
+def test_victim_strategies(victim):
+    tasks, expected = _make_tasks(600, "FAC2")
+    cfg = SchedulerConfig(
+        technique="FAC2", queue_layout="PERCORE", victim_strategy=victim,
+        n_workers=6, numa_domains=(0, 0, 0, 1, 1, 1), seed=2,
+    )
+    results, stats = ScheduledExecutor(cfg).run(tasks)
+    assert sum(results.values()) == expected
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 800),
+    p=st.integers(1, 8),
+    technique=st.sampled_from(sorted(PARTITIONERS)),
+    layout=st.sampled_from(["CENTRALIZED", "PERCORE", "PERGROUP"]),
+    seed=st.integers(0, 5),
+)
+def test_no_task_lost_or_duplicated(n, p, technique, layout, seed):
+    seen = []
+
+    def op(start, size):
+        seen.append((start, size))
+        return size
+
+    sched = chunk_schedule(technique, n, p, seed=seed)
+    tasks = tasks_from_schedule(sched, op)
+    domains = tuple(i * 2 // p for i in range(p))  # two domains
+    cfg = SchedulerConfig(
+        technique=technique, queue_layout=layout, victim_strategy="RND",
+        n_workers=p, numa_domains=domains, seed=seed,
+    )
+    results, _ = ScheduledExecutor(cfg).run(tasks)
+    assert sum(results.values()) == n
+    # exactly once: covered rows form a partition
+    covered = sorted(seen)
+    total = sum(s for _, s in covered)
+    assert total == n
+
+
+def test_victim_selector_orders():
+    sel = make_victim_selector("SEQ", 4)
+    assert sel.candidates(1) == [2, 3, 0]
+    sel = make_victim_selector("SEQPRI", 4, numa_domains=[0, 0, 1, 1])
+    cands = sel.candidates(0)
+    assert cands[0] == 1  # same domain first
+    assert set(cands) == {1, 2, 3}
+    sel = make_victim_selector("RNDPRI", 6, numa_domains=[0, 0, 0, 1, 1, 1], seed=3)
+    cands = sel.candidates(4)
+    assert set(cands[:2]) == {3, 5}  # domain-1 victims first
+
+
+def test_stealing_happens_under_imbalance():
+    # all work preloaded into worker 0's queue region -> others must steal
+    n = 300
+    data = np.ones(n)
+
+    def op(start, size):
+        return data[start : start + size].sum()
+
+    sched = chunk_schedule("STATIC", n, 1)  # single huge chunk
+    tasks = tasks_from_schedule(sched, op)
+    # split that chunk into unit tasks all owned by queue 0 via PERCORE fill
+    tasks = [RangeTask(i, i, 1, op, 1.0) for i in range(n)]
+    dq = DistributedQueues(tasks, "STATIC", n_workers=4, layout="PERCORE")
+    # STATIC deals one chunk per worker: force imbalance by draining 1..3
+    for q in (1, 2, 3):
+        while True:
+            got = dq._queues[q].dq
+            if not got:
+                break
+            got.clear()
+            break
+    stolen = dq.steal(thief_id=1, victim_queue=0)
+    assert stolen, "steal from non-empty victim must succeed"
+    assert dq.steals == 1
+
+
+def test_contended_pops_counted():
+    tasks, _ = _make_tasks(2000, "SS")
+    cfg = SchedulerConfig(technique="SS", queue_layout="CENTRALIZED", n_workers=8)
+    _, stats = ScheduledExecutor(cfg).run(tasks)
+    assert stats.queue_pops >= 2000 / 1  # SS: one pop per task (plus empties)

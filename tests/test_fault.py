@@ -1,0 +1,76 @@
+"""Fault-tolerant runner: retry, straggler detection, crash-restart resume."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step
+from repro.runtime.fault import FaultConfig, RunReport, run_loop
+
+
+def test_retry_on_transient_failure():
+    calls = {"n": 0}
+
+    def step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 2:  # second call fails once
+            raise RuntimeError("transient")
+        return state + 1, {}
+
+    state, report = run_loop(step, 0, range(5), config=FaultConfig(max_retries=3))
+    assert state == 5
+    assert report.retries == 1
+
+
+def test_retries_exhausted_raises():
+    def step(state, batch):
+        raise RuntimeError("persistent")
+
+    with pytest.raises(RuntimeError):
+        run_loop(step, 0, range(3), config=FaultConfig(max_retries=2))
+
+
+def test_straggler_detected():
+    def step(state, batch):
+        if batch == 8:
+            time.sleep(0.12)
+        else:
+            time.sleep(0.005)
+        return state, {}
+
+    _, report = run_loop(step, 0, range(12),
+                         config=FaultConfig(straggler_factor=5.0))
+    assert 8 in report.stragglers
+
+
+def test_crash_restart_resumes(tmp_path):
+    """Kill the loop mid-run; a fresh loop resumes from the checkpoint."""
+    cfg = FaultConfig(checkpoint_every=5, async_checkpoint=False)
+
+    class Boom(Exception):
+        pass
+
+    def step(state, batch):
+        if batch == 12 and state["phase"] == 0:
+            raise Boom()
+        return {"x": state["x"] + 1, "phase": state["phase"]}, {}
+
+    state0 = {"x": np.zeros(()), "phase": 0}
+    with pytest.raises(Boom):
+        run_loop(step, state0, range(20), ckpt_dir=tmp_path,
+                 config=FaultConfig(checkpoint_every=5, max_retries=1,
+                                    async_checkpoint=False))
+    saved = latest_step(tmp_path)
+    assert saved is not None and saved >= 5
+
+    # restart: resumes after the last committed step, finishes the epoch
+    def step2(state, batch):
+        return {"x": state["x"] + 1, "phase": 1}, {}
+
+    state, report = run_loop(step2, state0, range(saved + 1, 20),
+                             ckpt_dir=tmp_path,
+                             config=cfg,
+                             start_step=0)
+    assert report.resumed_from == saved
+    assert float(state["x"]) > 0

@@ -1,0 +1,156 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.cc_propagate import cc_propagate
+from repro.core import PARTITIONERS
+
+
+# ---------------------------------------------------------------------------
+# cc_propagate — the paper's DLS-scheduled VEE kernel
+# ---------------------------------------------------------------------------
+
+def _rand_graph(n, density, seed=0):
+    rng = np.random.default_rng(seed)
+    G = (rng.uniform(size=(n, n)) < density).astype(np.float32)
+    np.fill_diagonal(G, 0)
+    c = rng.integers(1, 10_000, n).astype(np.float32)
+    return jnp.asarray(G), jnp.asarray(c)
+
+
+@pytest.mark.parametrize("n,tile_r,tile_c", [(512, 128, 128), (1024, 256, 512),
+                                             (2048, 256, 1024)])
+@pytest.mark.parametrize("density", [0.001, 0.05])
+def test_cc_propagate_shapes(n, tile_r, tile_c, density):
+    G, c = _rand_graph(n, density, seed=n)
+    sched = jnp.arange(n // tile_r, dtype=jnp.int32)
+    got = cc_propagate(G, c, sched, tile_r=tile_r, tile_c=tile_c)
+    want = ref.cc_propagate_ref(G, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("technique", sorted(PARTITIONERS))
+def test_cc_schedule_order_invariance(technique):
+    """Any DLS execution order computes the same propagation (correctness of
+    the scheduler-driven grid)."""
+    G, c = _rand_graph(1024, 0.01, seed=3)
+    got = ops.cc_step(G, c, technique=technique, tile_r=128, tile_c=256)
+    want = ref.cc_propagate_ref(G, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_cc_iterates_to_components():
+    """Iterating the kernel converges to per-component max labels."""
+    # two disjoint cliques
+    n = 256
+    G = np.zeros((n, n), np.float32)
+    G[:128, :128] = 1
+    G[128:, 128:] = 1
+    np.fill_diagonal(G, 0)
+    c = jnp.arange(1, n + 1, dtype=jnp.float32)
+    G = jnp.asarray(G)
+    for _ in range(5):
+        c = ops.cc_step(G, c, technique="GSS", tile_r=128, tile_c=128)
+    assert np.all(np.asarray(c[:128]) == 128)
+    assert np.all(np.asarray(c[128:]) == 256)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,s,dh,causal", [
+    (1, 2, 256, 64, True), (2, 4, 512, 64, True), (1, 2, 256, 128, False),
+    (1, 1, 1024, 64, True),
+])
+def test_flash_attention(b, h, s, dh, causal, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(k1, (b, h, s, dh), dtype)
+    k = jax.random.normal(k2, (b, h, s, dh), dtype)
+    v = jax.random.normal(k3, (b, h, s, dh), dtype)
+    got = ops.attention(q, k, v, causal=causal, tile_q=128, tile_k=128)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_gqa_expansion():
+    k1, k2, k3 = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(k1, (2, 8, 256, 64))
+    k = jax.random.normal(k2, (2, 2, 256, 64))
+    v = jax.random.normal(k3, (2, 2, 256, 64))
+    got = ops.attention(q, k, v, causal=True, tile_q=128, tile_k=128)
+    kx = jnp.repeat(k, 4, axis=1)
+    vx = jnp.repeat(v, 4, axis=1)
+    want = ref.flash_attention_ref(q, kx, vx, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 chunked scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,chunk", [(128, 32), (256, 64), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan(s, chunk, dtype):
+    bt, h, dh, n = 2, 3, 16, 8
+    ks = jax.random.split(jax.random.key(2), 5)
+    x = jax.random.normal(ks[0], (bt, s, h, dh), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, s, h), dtype))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (bt, s, n), dtype)
+    C = jax.random.normal(ks[4], (bt, s, n), dtype)
+    D = jnp.ones((h,))
+    got = ops.mamba2_chunk_scan(x, dt, A, B, C, D, chunk=chunk)
+    want = ref.ssm_scan_ref(x, dt, A, B, C, D)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol,
+                               rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 chunked scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 32), (128, 64)])
+@pytest.mark.parametrize("decay_scale", [0.5, 4.0])  # 4.0 = fast decay (the
+                                                     # factored-form overflow case)
+def test_rwkv6_scan(s, chunk, decay_scale):
+    bt, h, dh = 2, 3, 16
+    ks = jax.random.split(jax.random.key(3), 5)
+    r = jax.random.normal(ks[0], (bt, h, s, dh))
+    k = jax.random.normal(ks[1], (bt, h, s, dh))
+    v = jax.random.normal(ks[2], (bt, h, s, dh))
+    logw = -jnp.exp(jax.random.normal(ks[3], (bt, h, s, dh)) * decay_scale)
+    logw = jnp.maximum(logw, -30.0)  # model-level decay contract (rwkv.py)
+    u = jax.random.normal(ks[4], (h, dh)) * 0.1
+    got = ops.wkv6(r, k, v, logw, u, chunk=chunk)
+    want = ref.rwkv6_scan_ref(r, k, v, logw, u)
+    assert bool(jnp.isfinite(got).all())
+    # tolerance floor: fp32 cumsum resolution at |cum| <= 30*chunk (the
+    # fast-decay case reaches ~1e-3 absolute at chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_model_wkv_matches_kernel():
+    """The model's chunked jnp path and the Pallas kernel agree."""
+    from repro.models.rwkv import _wkv_chunked
+    bt, h, s, dh = 1, 2, 64, 16
+    ks = jax.random.split(jax.random.key(4), 4)
+    r = jax.random.normal(ks[0], (bt, h, s, dh))
+    k = jax.random.normal(ks[1], (bt, h, s, dh))
+    v = jax.random.normal(ks[2], (bt, h, s, dh))
+    logw = -jnp.exp(jax.random.normal(ks[3], (bt, h, s, dh)) * 0.5)
+    u = jnp.zeros((h, dh))
+    model_y, _ = _wkv_chunked(r, k, v, logw, u, chunk=16)
+    kern_y = ops.wkv6(r, k, v, logw, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(model_y), np.asarray(kern_y),
+                               atol=2e-4, rtol=2e-4)

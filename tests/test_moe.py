@@ -1,0 +1,92 @@
+"""MoE dispatch invariants: conservation, capacity, padding-expert masking."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MoEConfig, get_config
+from repro.models.moe import _dispatch_compute_combine, _route, moe_block
+
+
+def _moe(n_routed=8, top_k=2, cf=8.0, n_pad=0):
+    return MoEConfig(n_routed=n_routed, n_shared=0, top_k=top_k,
+                     d_ff_expert=16, capacity_factor=cf,
+                     n_routed_padded=n_pad)
+
+
+def test_router_never_routes_to_padding_experts():
+    moe = _moe(n_routed=6, n_pad=8)
+    rng = jax.random.key(0)
+    x = jax.random.normal(rng, (64, 16))
+    w = jax.random.normal(jax.random.key(1), (16, 8))
+    idx, wts, probs = _route(w, x, moe)
+    assert int(idx.max()) < 6  # experts 6,7 are padding
+    np.testing.assert_allclose(np.asarray(probs[:, 6:]).sum(), 0.0, atol=1e-6)
+
+
+def test_topk_weights_normalized():
+    moe = _moe()
+    x = jax.random.normal(jax.random.key(2), (32, 16))
+    w = jax.random.normal(jax.random.key(3), (16, 8))
+    idx, wts, _ = _route(w, x, moe)
+    np.testing.assert_allclose(np.asarray(wts.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_dispatch_identity_experts_reconstruct_input():
+    """With identity-like experts and huge capacity, combine(dispatch(x))
+    must equal x times the sum of routing weights (= 1)."""
+    moe = _moe(n_routed=4, top_k=2, cf=100.0)
+    d, f = 8, 16
+    t = 32
+    x = jax.random.normal(jax.random.key(4), (t, d))
+    # experts: wi = [I; I] stacked so silu(g)*u ~ nonlinear; instead use
+    # linear check via matching manual computation
+    wi = jax.random.normal(jax.random.key(5), (4, d, 2 * f)) * 0.3
+    wo = jax.random.normal(jax.random.key(6), (4, f, d)) * 0.3
+    router = jax.random.normal(jax.random.key(7), (d, 4))
+    params = {"router": router, "experts": {"wi": wi, "wo": wo}, "_e_lo": 0}
+    idx, wts, _ = _route(router, x, moe)
+    y = _dispatch_compute_combine(params, x, idx, wts, capacity=t * 2, moe=moe)
+
+    # manual reference: every token goes through its top-k experts
+    def expert(e, v):
+        h = v @ wi[e]
+        g, u = jnp.split(h, 2)
+        return (jax.nn.silu(g) * u) @ wo[e]
+
+    ref = np.zeros((t, d), np.float32)
+    for i in range(t):
+        for k in range(moe.top_k):
+            ref[i] += float(wts[i, k]) * np.asarray(expert(int(idx[i, k]), x[i]))
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_drops_excess_tokens():
+    """With capacity 1 and all tokens routed to one expert, only 1 token's
+    worth of output survives per expert slot."""
+    moe = _moe(n_routed=2, top_k=1, cf=1.0)
+    d = 4
+    x = jnp.ones((8, d))
+    router = jnp.zeros((d, 2)).at[:, 0].set(10.0)  # everything -> expert 0
+    wi = jnp.ones((2, d, 2 * 4)) * 0.1
+    wo = jnp.ones((2, 4, d)) * 0.1
+    params = {"router": router, "experts": {"wi": wi, "wo": wo}, "_e_lo": 0}
+    idx, wts, _ = _route(router, x, moe)
+    y = _dispatch_compute_combine(params, x, idx, wts, capacity=1, moe=moe)
+    nz = np.asarray((jnp.abs(y).sum(-1) > 1e-9)).sum()
+    assert nz == 1  # 7 of 8 dropped
+
+
+def test_moe_block_smoke_with_shared():
+    cfg = get_config("qwen2-moe-a2.7b").reduced()
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, n_routed_padded=0))
+    from repro.models.moe import init_moe
+    params = init_moe(jax.random.key(8), cfg.d_model, cfg.moe)
+    x = jax.random.normal(jax.random.key(9), (2, 8, cfg.d_model))
+    y, aux = moe_block(params, x, cfg)
+    assert y.shape == x.shape
+    assert jnp.isfinite(y).all() and jnp.isfinite(aux)
+    assert float(aux) >= 0.0

@@ -1,0 +1,118 @@
+"""Property + unit tests for the 11 DLS partitioning techniques."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import PARTITIONERS, chunk_schedule, chunk_sizes, make_partitioner
+
+ALL = sorted(PARTITIONERS)
+
+
+@pytest.mark.parametrize("name", ALL)
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(0, 5000), p=st.integers(1, 64), seed=st.integers(0, 10))
+def test_chunks_cover_exactly(name, n, p, seed):
+    cs = chunk_sizes(name, n, p, seed=seed)
+    assert sum(cs) == n
+    assert all(c >= 1 for c in cs)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_schedule_is_contiguous_partition(name):
+    sched = chunk_schedule(name, 1234, 7, seed=1)
+    assert sched.dtype == np.int32
+    starts, sizes = sched[:, 0], sched[:, 1]
+    assert starts[0] == 0
+    np.testing.assert_array_equal(starts[1:], (starts + sizes)[:-1])
+    assert int((starts + sizes)[-1]) == 1234
+
+
+def test_static_one_chunk_per_worker():
+    cs = chunk_sizes("STATIC", 1000, 8)
+    assert len(cs) == 8
+    assert all(c == 125 for c in cs)
+    # non-divisible: still covers
+    cs = chunk_sizes("STATIC", 1001, 8)
+    assert sum(cs) == 1001 and len(cs) <= 9
+
+
+def test_ss_unit_chunks():
+    assert chunk_sizes("SS", 100, 8) == [1] * 100
+
+
+def test_mfsc_fixed_moderate():
+    cs = chunk_sizes("MFSC", 10000, 20)
+    assert len(set(cs[:-1])) == 1  # fixed size (last may be remainder)
+    assert 1 < cs[0] < 10000 // 20  # finer than STATIC, coarser than SS
+
+
+@pytest.mark.parametrize("name", ["GSS", "TSS", "FAC2", "TFSS"])
+def test_decreasing_techniques_monotone(name):
+    cs = chunk_sizes(name, 5000, 8)
+    assert all(a >= b for a, b in zip(cs, cs[1:])), cs[:20]
+
+
+@pytest.mark.parametrize("name", ["FISS", "VISS"])
+def test_increasing_techniques_monotone(name):
+    cs = chunk_sizes(name, 5000, 8)
+    body = cs[:-1]  # final chunk is a remainder clamp
+    assert all(a <= b for a, b in zip(body, body[1:])), cs[:20]
+
+
+def test_gss_formula():
+    p = make_partitioner("GSS", 1000, 8)
+    assert p.next_chunk() == math.ceil(1000 / 8)
+    assert p.next_chunk() == math.ceil((1000 - 125) / 8)
+
+
+def test_fac2_batches_of_p():
+    cs = chunk_sizes("FAC2", 1024, 4)
+    # first batch: ceil(1024/8) = 128 held for P=4 requests
+    assert cs[:4] == [128] * 4
+    assert cs[4:8] == [64] * 4
+
+
+def test_pss_seeded_deterministic():
+    a = chunk_sizes("PSS", 3000, 8, seed=42)
+    b = chunk_sizes("PSS", 3000, 8, seed=42)
+    c = chunk_sizes("PSS", 3000, 8, seed=43)
+    assert a == b
+    assert a != c
+
+
+def test_pls_static_then_dynamic():
+    cs = chunk_sizes("PLS", 1000, 4)
+    # first 500 tasks in equal static chunks of 125
+    static_part = []
+    acc = 0
+    for c in cs:
+        if acc >= 500:
+            break
+        static_part.append(c)
+        acc += c
+    assert all(c == 125 for c in static_part)
+
+
+def test_update_hooks():
+    p = make_partitioner("PSS", 1000, 8)
+    p.update(active_workers=2)
+    assert p.next_chunk() >= math.ceil(1000 / (1.5 * 2) * 0.8) - 1
+    p2 = make_partitioner("PLS", 1000, 8)
+    p2.update(speed=2.0)  # no crash; dynamic divisor adapts
+
+
+def test_unknown_name_raises():
+    with pytest.raises(ValueError):
+        make_partitioner("NOPE", 10, 2)
+
+
+def test_reset_reproduces():
+    p = make_partitioner("PSS", 500, 4, seed=7)
+    seq1 = [p.next_chunk() for _ in range(5)]
+    p.reset()
+    seq2 = [p.next_chunk() for _ in range(5)]
+    assert seq1 == seq2

@@ -1,0 +1,96 @@
+"""Simulator behaviour: reproduces the paper's qualitative claims in vitro."""
+
+import numpy as np
+import pytest
+
+from repro.core import SimOverheads, simulate, select_offline, OnlineTuner
+
+
+def _sparse_costs(n=20000, seed=0):
+    """Spatially-correlated heavy-tailed costs (graph hub clusters).
+
+    Several contiguous hub blocks scattered through the id space, like the
+    co-purchase graph's dense communities.
+    """
+    rng = np.random.default_rng(seed)
+    base = rng.pareto(1.3, n) * 2e-6 + 5e-7
+    for _ in range(10):
+        lo = int(rng.integers(0, n - n // 100))
+        base[lo : lo + n // 100] *= 8.0
+    return base
+
+
+def test_conservation_all_layouts():
+    costs = _sparse_costs(5000)
+    for layout in ("CENTRALIZED", "PERCORE", "PERGROUP"):
+        res = simulate(costs, technique="GSS", queue_layout=layout,
+                       victim_strategy="SEQ", n_workers=8,
+                       numa_domains=[i // 4 for i in range(8)])
+        # busy time accounts for every task at least once (locality penalty >= raw)
+        assert sum(res.per_worker_busy) >= costs.sum() * 0.999
+        assert res.makespan >= max(res.per_worker_finish) - 1e-12
+
+
+def test_p5_ss_explodes_under_contention():
+    costs = np.full(20000, 1e-6)
+    ss = simulate(costs, technique="SS", n_workers=56).makespan
+    static = simulate(costs, technique="STATIC", n_workers=56).makespan
+    assert ss > 5 * static
+
+
+def test_p1_dls_beats_static_on_sparse():
+    costs = _sparse_costs()
+    static = simulate(costs, technique="STATIC", n_workers=20).makespan
+    mfsc = simulate(costs, technique="MFSC", n_workers=20).makespan
+    gss = simulate(costs, technique="GSS", n_workers=20).makespan
+    assert mfsc < static
+    assert gss < static
+
+
+def test_p4_static_wins_on_dense():
+    costs = np.full(50000, 2e-6)  # dense LR: perfectly uniform rows
+    static = simulate(costs, technique="STATIC", n_workers=20).makespan
+    for t in ("MFSC", "TFSS", "PLS", "PSS"):
+        assert simulate(costs, technique=t, n_workers=20).makespan >= static * 0.999
+
+
+def test_p2_spread_shrinks_with_cores():
+    costs = _sparse_costs()
+    def spread(p):
+        ms = [simulate(costs, technique=t, n_workers=p).makespan
+              for t in ("MFSC", "GSS", "TSS", "FAC2", "TFSS")]
+        return (max(ms) - min(ms)) / min(ms)
+    assert spread(56) < spread(20) * 1.5  # spread does not grow with cores
+
+
+def test_more_workers_faster():
+    costs = _sparse_costs(10000)
+    m20 = simulate(costs, technique="GSS", n_workers=20).makespan
+    m56 = simulate(costs, technique="GSS", n_workers=56).makespan
+    assert m56 < m20
+
+
+def test_select_offline_prefers_static_for_dense():
+    costs = np.full(20000, 2e-6)
+    best, scores = select_offline(costs, n_workers=16,
+                                  numa_domains=[i // 8 for i in range(16)])
+    technique, layout, victim = best
+    # dense balanced work: STATIC should be at/near the top (paper P4)
+    static_best = min(v for (t, l, _), v in scores.items() if t == "STATIC")
+    assert static_best <= min(scores.values()) * 1.02
+
+
+def test_online_tuner_converges():
+    costs = _sparse_costs(8000)
+    tuner = OnlineTuner.default(seed=0)
+    for _ in range(80):
+        combo = tuner.suggest()
+        t, l, v = combo
+        res = simulate(costs, technique=t, queue_layout=l, victim_strategy=v,
+                       n_workers=16, numa_domains=[i // 8 for i in range(16)])
+        tuner.observe(res.makespan)
+    t, l, v = tuner.best
+    best_ms = simulate(costs, technique=t, queue_layout=l, victim_strategy=v,
+                       n_workers=16, numa_domains=[i // 8 for i in range(16)]).makespan
+    static_ms = simulate(costs, technique="STATIC", n_workers=16).makespan
+    assert best_ms <= static_ms * 1.05  # tuner at least matches the default

@@ -1,0 +1,119 @@
+"""End-to-end behaviour tests: the full stack wired together.
+
+train: DaphneSched data pipeline -> sharded train step -> fault-tolerant
+loop -> checkpoint -> resume -> loss decreases.
+serve: prefill -> greedy decode loop -> matches teacher forcing.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SchedulerConfig
+from repro.data import DataPipeline, SyntheticCorpus
+from repro.launch.mesh import make_host_mesh
+from repro.models import Model
+from repro.optim import AdamWConfig
+from repro.runtime import (axis_rules, build_train_step, init_train_state,
+                           make_policy)
+from repro.runtime.fault import FaultConfig, run_loop
+from repro.runtime.steps import TrainState
+
+
+def _tiny_cfg():
+    base = get_config("granite-8b")
+    return dataclasses.replace(
+        base, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        d_head=0, vocab_size=512, vocab_pad_multiple=64, moe=None, mla=None,
+        ssm=None, rwkv=None, encdec=None, frontend=None, family="dense")
+
+
+def test_train_end_to_end_with_checkpoint_resume(tmp_path):
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    opt_cfg = AdamWConfig(lr=1e-3, total_steps=100, warmup_steps=2)
+    mesh = make_host_mesh(1, 1)
+    policy = make_policy(cfg, mesh)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, mean_len=32, seed=1)
+    pipe = DataPipeline(corpus, global_batch=4, seq_len=64,
+                        sched=SchedulerConfig(technique="FAC2", n_workers=2))
+
+    with axis_rules(mesh, policy.rules()):
+        state = init_train_state(model, jax.random.key(0), opt_cfg)
+        train_step = jax.jit(build_train_step(model, opt_cfg))
+        losses = []
+
+        def step_fn(state, batch):
+            state, m = train_step(state, {"tokens": jnp.asarray(batch["tokens"])})
+            losses.append(float(m["loss"]))
+            return state, m
+
+        fixed = next(iter(pipe.batches(1)))  # memorize one batch -> strict
+        state, report = run_loop(step_fn, state, [fixed] * 8,
+                                 ckpt_dir=tmp_path,
+                                 config=FaultConfig(checkpoint_every=4,
+                                                    async_checkpoint=False),
+                                 state_restorer=lambda t: TrainState(**t))
+        assert report.steps_run == 8
+        assert losses[-1] < losses[0] - 0.05, (losses[0], losses[-1])
+
+        # simulate a restart: fresh loop resumes from the checkpoint
+        state2, report2 = run_loop(step_fn, None, pipe.batches(2, start_step=8),
+                                   ckpt_dir=tmp_path,
+                                   config=FaultConfig(checkpoint_every=100,
+                                                      async_checkpoint=False),
+                                   state_restorer=lambda t: TrainState(**t))
+        assert report2.resumed_from is not None
+        assert int(state2.step) > 0
+
+
+def test_grad_accumulation_matches_full_batch():
+    """n_microbatches=4 must give (nearly) the same update as one batch."""
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    opt_cfg = AdamWConfig(lr=1e-3, weight_decay=0.0, clip_norm=1e9)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 65)),
+                                   jnp.int32)}
+    s1 = init_train_state(model, jax.random.key(1), opt_cfg)
+    s2 = init_train_state(model, jax.random.key(1), opt_cfg)
+    step1 = jax.jit(build_train_step(model, opt_cfg, n_microbatches=1))
+    step4 = jax.jit(build_train_step(model, opt_cfg, n_microbatches=4))
+    s1, m1 = step1(s1, batch)
+    s2, m4 = step4(s2, batch)
+    # CE averaged per microbatch vs per batch: close but not bit-identical
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-2)
+    l1 = jax.tree.leaves(s1.params)
+    l2 = jax.tree.leaves(s2.params)
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
+
+
+def test_serve_greedy_matches_teacher_forcing():
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(2))
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+
+    cache = model.init_cache(2, 24, dtype=jnp.float32)
+    logits, cache = jax.jit(model.prefill)(params, {"tokens": prompt}, cache)
+    toks = [jnp.argmax(logits[:, -1], -1)]
+    decode = jax.jit(model.decode_step)
+    for t in range(4):
+        lg, cache = decode(params, toks[-1][:, None], cache, jnp.int32(8 + t))
+        toks.append(jnp.argmax(lg[:, 0], -1))
+    generated = jnp.stack(toks, 1)
+
+    # teacher-forced check: feeding prompt+generated reproduces the argmaxes
+    full = jnp.concatenate([prompt, generated], axis=1)
+    positions = jnp.arange(full.shape[1] - 1)
+    x = model._embed_inputs(params, {"tokens": full[:, :-1]}, positions)
+    h, _, _ = model._trunk(params, x, positions)
+    ref_logits = model._logits(params, h)
+    ref_next = jnp.argmax(ref_logits[:, 7:12], -1)
+    np.testing.assert_array_equal(np.asarray(generated), np.asarray(ref_next))
