@@ -15,6 +15,7 @@ analogues + claims validation into artifacts/.
 
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 import time
@@ -139,6 +140,41 @@ def bench_schedule_quality() -> None:
         "max/mean load % after 12 persistent-stealing iterations")
 
 
+def bench_pipeline_dag(quick: bool = False) -> None:
+    """Pipeline-DAG runtime rows (§9): per-stage-tuned simulated makespan vs
+    the best single-global-config baseline, plus measured real-pool overlap.
+
+    ``pipeline_dag_cc_regression`` is the CI-gated row: the per-stage search
+    starts from the best uniform assignment and only accepts improvements,
+    so tuned <= baseline must hold on every run.
+    """
+    from repro.core import SchedulerConfig, select_offline_dag
+    from repro.vee import recommendation_pipeline, rmat_graph
+    from repro.vee.apps import cc_iteration_dag
+
+    G = rmat_graph(scale=11 if quick else 13, edge_factor=8, seed=7,
+                   relabel="blocks")
+    n = G.n_rows
+    nnz = G.row_nnz().astype(float)
+    dag = cc_iteration_dag(G, np.arange(1, n + 1, dtype=np.int64))
+    stage_costs = {"propagate": nnz * 2e-7 + 5e-8,
+                   "changed": np.full(n, 2e-8)}
+    assign, tuned, uniform = select_offline_dag(
+        dag, stage_costs, n_workers=20, passes=1 if quick else 2)
+    base_combo = min(uniform, key=uniform.get)
+    base = uniform[base_combo]
+    tag = " ".join(f"{s}={'/'.join(c)}" for s, c in assign.items())
+    row("pipeline_dag_cc_regression", tuned * 1e6,
+        f"baseline={base * 1e6:.1f}us ({'/'.join(base_combo)}) "
+        f"tuned {tag} gain={(base - tuned) / base * 100:.2f}%")
+
+    _, rec = recommendation_pipeline(4096, 64, SchedulerConfig(
+        technique="MFSC", queue_layout="CENTRALIZED", n_workers=4))
+    row("pipeline_dag_branch_overlap",
+        rec.overlap_s("item_norms", "user_bias") * 1e6,
+        "independent branches active together (real pool, us)")
+
+
 def paper_figures() -> None:
     import paper_repro
     claims = paper_repro.main(scale=16)
@@ -159,16 +195,18 @@ def roofline_summary() -> None:
             f"frac={r['roofline_fraction']:.4f}")
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
     ART.mkdir(exist_ok=True)
     print("name,us_per_call,derived")
     bench_partitioners()
     bench_queue_ops()
     bench_executor()
-    bench_cc_vee()
-    bench_schedule_quality()
-    paper_figures()
-    roofline_summary()
+    bench_pipeline_dag(quick=quick)
+    if not quick:
+        bench_cc_vee()
+        bench_schedule_quality()
+        paper_figures()
+        roofline_summary()
     with (ART / "bench.csv").open("w") as f:
         f.write("name,us_per_call,derived\n")
         for n, u, d in ROWS:
@@ -176,4 +214,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="sub-minute smoke subset (CI perf rows)")
+    main(quick=ap.parse_args().quick)

@@ -7,8 +7,25 @@ distributed coordinator, the TPU device-schedule adaptation, and the
 auto-selection extension (the paper's stated future work).
 """
 
-from .autotune import OnlineTuner, default_search_space, select_offline
+from .autotune import (
+    DagTuner,
+    OnlineTuner,
+    default_search_space,
+    select_offline,
+    select_offline_dag,
+)
 from .coordinator import Coordinator, CoordinatorConfig, NodeSched
+from .dag import (
+    DEP_ELEMENTWISE,
+    DEP_FULL,
+    DagResult,
+    PipelineDAG,
+    PipelineExecutor,
+    Stage,
+    StageDep,
+    StageResult,
+    TaskEvent,
+)
 from .device_schedule import (
     assign_chunks,
     build_task_table,
@@ -25,7 +42,7 @@ from .partitioners import (
     make_partitioner,
 )
 from .queues import QUEUE_LAYOUTS, CentralizedQueue, DistributedQueues
-from .simulator import SimOverheads, SimResult, simulate
+from .simulator import DagSimResult, SimOverheads, SimResult, simulate, simulate_dag
 from .task import RangeTask, tasks_from_schedule
 from .victim import VICTIM_STRATEGIES, VictimSelector, make_victim_selector
 
@@ -35,9 +52,12 @@ __all__ = [
     "VICTIM_STRATEGIES", "VictimSelector", "make_victim_selector",
     "RangeTask", "tasks_from_schedule",
     "SchedulerConfig", "ScheduledExecutor", "ExecutionStats",
-    "SimOverheads", "SimResult", "simulate",
+    "SimOverheads", "SimResult", "simulate", "DagSimResult", "simulate_dag",
+    "DEP_FULL", "DEP_ELEMENTWISE", "Stage", "StageDep", "PipelineDAG",
+    "PipelineExecutor", "StageResult", "DagResult", "TaskEvent",
     "Coordinator", "CoordinatorConfig", "NodeSched",
     "build_task_table", "assign_chunks", "per_shard_tables", "rebalance",
     "cost_balanced_assignment",
     "select_offline", "OnlineTuner", "default_search_space",
+    "select_offline_dag", "DagTuner",
 ]

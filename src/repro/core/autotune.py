@@ -27,10 +27,11 @@ import numpy as np
 
 from .executor import SchedulerConfig
 from .partitioners import PARTITIONERS
-from .simulator import SimOverheads, simulate
+from .simulator import SimOverheads, simulate, simulate_dag
 from .victim import VICTIM_STRATEGIES
 
-__all__ = ["select_offline", "OnlineTuner", "default_search_space"]
+__all__ = ["select_offline", "OnlineTuner", "default_search_space",
+           "select_offline_dag", "DagTuner"]
 
 
 def default_search_space(include_ss: bool = False):
@@ -115,3 +116,113 @@ class OnlineTuner:
         return SchedulerConfig(
             technique=t, queue_layout=l, victim_strategy=v, n_workers=n_workers, **kw
         )
+
+
+# ---------------------------------------------------------------------------
+# per-stage selection for pipeline DAGs (the tentpole extension)
+# ---------------------------------------------------------------------------
+
+def select_offline_dag(
+    dag,
+    stage_costs: dict[str, np.ndarray],
+    n_workers: int,
+    overheads: SimOverheads = SimOverheads(),
+    include_ss: bool = False,
+    seed: int = 0,
+    passes: int = 2,
+) -> tuple[dict[str, tuple[str, str, str]], float, dict[tuple, float]]:
+    """Per-stage (technique x layout x victim) selection for a PipelineDAG.
+
+    Strategy: score every *uniform* assignment (same combo for all stages)
+    with ``simulate_dag`` — that is exactly the best a single global
+    SchedulerConfig could do — then coordinate-descend per stage from that
+    argmin, accepting only improvements. The result is therefore guaranteed
+    no worse than the best single-global-config baseline on the same
+    workload, and strictly better whenever stages want different options
+    (sparse CC propagation vs its dense convergence check, say).
+
+    Returns (per_stage_assignment, tuned_makespan, uniform_scores) where
+    ``uniform_scores`` maps each combo to its uniform-assignment makespan
+    (``min(uniform_scores.values())`` is the global-config baseline).
+
+    The DAG simulator models layouts via queue-access overheads but not
+    victim order, so the search space is collapsed to unique
+    (technique, layout) pairs with victim fixed to SEQ — victim variants
+    would score identically and only waste simulations. The baseline is
+    unaffected: a victim change can't alter a uniform score either.
+    """
+    space = list(dict.fromkeys(
+        (t, l, "SEQ") for t, l, _ in default_search_space(include_ss)))
+    names = dag.stage_names
+
+    def score(assign: dict[str, tuple[str, str, str]]) -> float:
+        return simulate_dag(dag, stage_costs, assign, n_workers=n_workers,
+                            overheads=overheads, seed=seed).makespan
+
+    uniform = {c: score({n: c for n in names}) for c in space}
+    best_combo = min(uniform, key=uniform.get)
+    assign = {n: best_combo for n in names}
+    best = uniform[best_combo]
+
+    for _ in range(max(1, passes)):
+        improved = False
+        for n in names:
+            for c in space:
+                if c == assign[n]:
+                    continue
+                trial = dict(assign)
+                trial[n] = c
+                v = score(trial)
+                if v < best:
+                    best, assign, improved = v, trial, True
+        if not improved:
+            break
+    return assign, best, uniform
+
+
+@dataclass
+class DagTuner:
+    """Per-stage epsilon-greedy tuner for iterative pipeline DAGs.
+
+    One OnlineTuner arm-set per stage, trained coordinate-wise: each
+    ``suggest``/``observe`` round lets ONE focus stage deviate (explore)
+    while the others play their current best, so the shared reward (the
+    DAG wall time) is attributable to the deviating stage. The focus
+    rotates round-robin across stages.
+    """
+
+    stage_names: list[str]
+    epsilon: float = 0.2
+    seed: int = 0
+
+    def __post_init__(self):
+        self._tuners = {
+            n: OnlineTuner.default(epsilon=self.epsilon, seed=self.seed + i)
+            for i, n in enumerate(self.stage_names)
+        }
+        self._round = 0
+        self._focus: str | None = None
+
+    @classmethod
+    def for_dag(cls, dag, epsilon: float = 0.2, seed: int = 0) -> "DagTuner":
+        return cls(list(dag.stage_names), epsilon=epsilon, seed=seed)
+
+    def suggest(self) -> dict[str, tuple[str, str, str]]:
+        self._focus = self.stage_names[self._round % len(self.stage_names)]
+        self._round += 1
+        out = {}
+        for n, t in self._tuners.items():
+            if n == self._focus:
+                out[n] = t.suggest()
+            else:
+                explored = int(t._count.sum()) > 0
+                out[n] = t.best if explored else t.suggest()
+        return out
+
+    def observe(self, wall_time: float) -> None:
+        if self._focus is not None:
+            self._tuners[self._focus].observe(wall_time)
+
+    @property
+    def best(self) -> dict[str, tuple[str, str, str]]:
+        return {n: t.best for n, t in self._tuners.items()}

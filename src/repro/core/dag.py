@@ -1,0 +1,418 @@
+"""Pipeline-DAG runtime: DaphneSched over multi-stage IDA pipelines.
+
+The paper schedules *integrated data analysis pipelines* — multi-stage
+DM+HPC+ML workloads — but a flat RangeTask batch only models one stage.
+This module lifts scheduling onto the pipeline graph itself:
+
+  ``Stage``        an operator over its own row range with an optional
+                   per-stage SchedulerConfig (technique x layout x victim) —
+                   the per-stage adaptive selection that heterogeneous
+                   pipelines need (Trident/Canary, PAPERS.md).
+  ``PipelineDAG``  topologically-ordered stages joined by data dependencies.
+  ``PipelineExecutor``  runs the whole DAG on ONE shared worker pool with
+                   inter-stage streaming: a completed chunk of a producer
+                   makes the overlapping consumer chunks runnable *before*
+                   the producer's stage barrier, so producer/consumer pairs
+                   and independent branches overlap on the same workers.
+
+Dependency kinds (``StageDep.kind``):
+
+  ``full``         the consumer needs the producer's combined value; its
+                   chunks become runnable only when the producer finishes.
+  ``elementwise``  consumer rows [s, s+z) need only producer rows [s, s+z);
+                   the producer must be row-shaped (combine='concat') with
+                   the same row count. This is the streaming edge.
+
+Stage ops have signature ``op(inputs, start, size)`` where ``inputs`` maps
+each producer name to its output: the finalized value for ``full`` deps, or
+the (partially filled) row buffer for ``elementwise`` deps — only rows
+[start, start+size) are guaranteed complete in the latter.
+
+Work assignment honours the per-stage config: CENTRALIZED stages share one
+FIFO; PERCORE/PERGROUP stages deal chunks to per-worker / per-domain queues
+and idle workers steal from victims in strategy order (paper C.2). Chunk
+granularity always follows the stage's partitioning technique. After each
+task a worker advances its stage cursor to the next stage in topological
+order, which drains ready consumer chunks eagerly (streaming) and
+interleaves independent branches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from .executor import SchedulerConfig
+from .partitioners import chunk_schedule
+from .victim import make_victim_selector
+
+__all__ = [
+    "DEP_FULL", "DEP_ELEMENTWISE", "Stage", "StageDep", "PipelineDAG",
+    "PipelineExecutor", "StageResult", "DagResult", "TaskEvent",
+]
+
+DEP_FULL = "full"
+DEP_ELEMENTWISE = "elementwise"
+
+
+@dataclass(frozen=True)
+class StageDep:
+    """A data dependency on ``producer``; see module docstring for kinds."""
+
+    producer: str
+    kind: str = DEP_FULL
+
+    def __post_init__(self):
+        if self.kind not in (DEP_FULL, DEP_ELEMENTWISE):
+            raise ValueError(f"unknown dep kind {self.kind!r}")
+
+
+@dataclass(frozen=True)
+class Stage:
+    """An operator with its own task range, cost model, and scheduler config.
+
+    ``combine`` is 'concat' (partials are row blocks of an (n_rows, ...)
+    output) or 'sum' (partials are additive reductions). Only 'concat'
+    stages can be elementwise producers.
+    """
+
+    name: str
+    n_rows: int
+    op: Callable[[dict, int, int], Any] = field(compare=False, repr=False)
+    combine: str = "concat"
+    deps: tuple[StageDep, ...] = ()
+    config: SchedulerConfig | None = None
+    cost_of_range: Callable[[int, int], float] | None = field(
+        compare=False, repr=False, default=None)
+
+    def __post_init__(self):
+        if self.combine not in ("concat", "sum"):
+            raise ValueError(f"unknown combine {self.combine!r}")
+        if self.n_rows < 0:
+            raise ValueError("n_rows must be >= 0")
+
+
+class PipelineDAG:
+    """Validated, topologically-ordered stage graph."""
+
+    def __init__(self, stages: list[Stage]):
+        names = [s.name for s in stages]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate stage names in {names}")
+        self.stages: dict[str, Stage] = {s.name: s for s in stages}
+        for s in stages:
+            for d in s.deps:
+                if d.producer not in self.stages:
+                    raise ValueError(
+                        f"stage {s.name!r} depends on unknown stage {d.producer!r}")
+                prod = self.stages[d.producer]
+                if d.kind == DEP_ELEMENTWISE:
+                    if prod.combine != "concat":
+                        raise ValueError(
+                            f"elementwise dep {s.name!r}->{d.producer!r} needs a "
+                            f"'concat' producer, got {prod.combine!r}")
+                    if prod.n_rows != s.n_rows:
+                        raise ValueError(
+                            f"elementwise dep {s.name!r}->{d.producer!r} needs equal "
+                            f"row counts ({s.n_rows} vs {prod.n_rows})")
+        self.order: list[str] = self._toposort(stages)
+
+    @staticmethod
+    def _toposort(stages: list[Stage]) -> list[str]:
+        indeg = {s.name: len(s.deps) for s in stages}
+        consumers: dict[str, list[str]] = {s.name: [] for s in stages}
+        for s in stages:
+            for d in s.deps:
+                consumers[d.producer].append(s.name)
+        ready = deque(s.name for s in stages if indeg[s.name] == 0)
+        order = []
+        while ready:
+            n = ready.popleft()
+            order.append(n)
+            for c in consumers[n]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    ready.append(c)
+        if len(order) != len(stages):
+            cyc = sorted(n for n, d in indeg.items() if d > 0)
+            raise ValueError(f"dependency cycle through stages {cyc}")
+        return order
+
+    @property
+    def stage_names(self) -> list[str]:
+        return list(self.order)
+
+
+@dataclass(frozen=True)
+class TaskEvent:
+    """One executed chunk: timeline entry for ordering/overlap analysis."""
+
+    stage: str
+    task_id: int
+    start: int
+    size: int
+    worker: int
+    t_start: float   # seconds since run() began
+    t_end: float
+    stolen: bool = False
+
+
+@dataclass
+class StageResult:
+    value: Any
+    schedule: np.ndarray        # (n_chunks, 2) (start, size) actually used
+    per_task_costs: np.ndarray  # measured seconds per chunk
+    config: SchedulerConfig
+    t_first: float | None = None  # first chunk start (since run() began)
+    t_last: float | None = None   # last chunk end
+
+
+@dataclass
+class DagResult:
+    values: dict[str, Any]
+    stages: dict[str, StageResult]
+    events: list[TaskEvent]
+    wall_time_s: float
+    steals: int
+    per_worker_busy_s: list[float]
+    per_worker_tasks: list[int]
+
+    def span(self, stage: str) -> tuple[float, float]:
+        r = self.stages[stage]
+        if r.t_first is None:
+            return (0.0, 0.0)
+        return (r.t_first, r.t_last)
+
+    def overlap_s(self, a: str, b: str) -> float:
+        """Seconds during which stages ``a`` and ``b`` were both active."""
+        a0, a1 = self.span(a)
+        b0, b1 = self.span(b)
+        return max(0.0, min(a1, b1) - max(a0, b0))
+
+
+class _StageRun:
+    """Mutable execution state of one stage (guarded by the executor lock)."""
+
+    __slots__ = ("stage", "cfg", "schedule", "tasks", "queues", "home",
+                 "selector", "row_done", "remaining", "out", "acc", "value",
+                 "done", "costs", "t_first", "t_last")
+
+    def __init__(self, stage: Stage, cfg: SchedulerConfig, domains: list[int]):
+        self.stage = stage
+        self.cfg = cfg
+        self.schedule = chunk_schedule(cfg.technique, stage.n_rows,
+                                       cfg.n_workers, seed=cfg.seed)
+        self.tasks = [(i, int(s), int(z)) for i, (s, z) in enumerate(self.schedule)]
+        layout = cfg.queue_layout.upper()
+        if layout == "CENTRALIZED" or not self.tasks:
+            self.queues = [deque(self.tasks)]
+            self.home = [0] * cfg.n_workers
+            self.selector = None
+        elif layout == "PERCORE":
+            # global chunk sequence dealt round-robin (mirrors DistributedQueues)
+            self.queues = [deque() for _ in range(cfg.n_workers)]
+            for k, t in enumerate(self.tasks):
+                self.queues[k % cfg.n_workers].append(t)
+            self.home = list(range(cfg.n_workers))
+            self.selector = make_victim_selector(
+                cfg.victim_strategy, cfg.n_workers, numa_domains=domains,
+                seed=cfg.seed)
+        elif layout == "PERGROUP":
+            # pre-partition the ROW space into contiguous per-domain blocks
+            # (spatial locality, mirroring DistributedQueues): assign each
+            # chunk by its start row, not by position in the chunk sequence —
+            # decreasing techniques front-load the sequence with huge chunks.
+            nq = max(domains) + 1
+            self.queues = [deque() for _ in range(nq)]
+            for t in self.tasks:
+                owner = min(nq - 1, t[1] * nq // max(1, stage.n_rows))
+                self.queues[owner].append(t)
+            self.home = list(domains)
+            self.selector = make_victim_selector(
+                cfg.victim_strategy, nq, numa_domains=list(range(nq)),
+                seed=cfg.seed)
+        else:
+            raise ValueError(f"unknown queue layout {cfg.queue_layout!r}")
+        self.row_done = np.zeros(stage.n_rows, dtype=bool)
+        self.remaining = len(self.tasks)
+        self.out: np.ndarray | None = None   # concat buffer
+        self.acc: Any = None                 # sum accumulator
+        self.value: Any = None
+        self.done = self.remaining == 0
+        self.costs = np.zeros(len(self.tasks))
+        self.t_first: float | None = None
+        self.t_last: float | None = None
+
+
+class PipelineExecutor:
+    """Run a PipelineDAG on one shared worker pool with streaming.
+
+    ``config`` supplies the pool shape (n_workers, numa_domains, seed) and
+    the default scheduling tuple. ``per_stage`` overrides the tuple per
+    stage: values may be SchedulerConfig or a (technique, layout, victim)
+    combo as produced by the auto-tuners; ``Stage.config`` takes precedence
+    over the default but below ``per_stage``.
+    """
+
+    def __init__(
+        self,
+        dag: PipelineDAG,
+        config: SchedulerConfig,
+        per_stage: dict[str, SchedulerConfig | tuple[str, str, str]] | None = None,
+    ):
+        self.dag = dag
+        self.config = config
+        d = config.numa_domains
+        self._domains = list(d) if d is not None else [0] * config.n_workers
+        self._per_stage = dict(per_stage or {})
+
+    def _resolve(self, stage: Stage) -> SchedulerConfig:
+        chosen = self._per_stage.get(stage.name, stage.config)
+        if chosen is None:
+            return self.config
+        if isinstance(chosen, tuple):
+            t, l, v = chosen
+            return dataclasses.replace(
+                self.config, technique=t, queue_layout=l, victim_strategy=v)
+        return dataclasses.replace(
+            chosen, n_workers=self.config.n_workers,
+            numa_domains=self.config.numa_domains)
+
+    def run(self) -> DagResult:
+        runs = {name: _StageRun(self.dag.stages[name], self._resolve(self.dag.stages[name]),
+                                self._domains)
+                for name in self.dag.order}
+        order = [runs[n] for n in self.dag.order]
+        nstages = len(order)
+        n_workers = self.config.n_workers
+        cond = threading.Condition()
+        remaining_total = sum(sr.remaining for sr in order)
+        events: list[TaskEvent] = []
+        errors: list[BaseException] = []
+        busy = [0.0] * n_workers
+        ntasks = [0] * n_workers
+        steals = [0]
+        t0_run = time.perf_counter()
+
+        def task_ready(sr: _StageRun, task: tuple[int, int, int]) -> bool:
+            _, s, z = task
+            for d in sr.stage.deps:
+                p = runs[d.producer]
+                if d.kind == DEP_FULL:
+                    if not p.done:
+                        return False
+                elif not p.row_done[s:s + z].all():
+                    return False
+            return True
+
+        def try_pop(sr: _StageRun, wid: int):
+            """Pop the next runnable chunk for worker ``wid`` (FIFO head of
+            its home queue, else a victim's tail) — or None."""
+            q = sr.queues[sr.home[wid] if len(sr.home) > wid else 0]
+            if q and task_ready(sr, q[0]):
+                return q.popleft(), False
+            if sr.selector is not None:
+                for v in sr.selector.candidates(sr.home[wid]):
+                    vq = sr.queues[v]
+                    if vq and task_ready(sr, vq[-1]):
+                        return vq.pop(), True
+            return None, False
+
+        def record(sr: _StageRun, task, value, dt, wid, rel0, rel1, stolen):
+            nonlocal remaining_total
+            i, s, z = task
+            if sr.stage.combine == "concat":
+                v = np.asarray(value)
+                if v.shape[:1] != (z,):
+                    raise ValueError(
+                        f"stage {sr.stage.name!r}: concat op must return "
+                        f"(size, ...) rows, got shape {v.shape} for size {z}")
+                if sr.out is None:
+                    sr.out = np.empty((sr.stage.n_rows,) + v.shape[1:], v.dtype)
+                sr.out[s:s + z] = v
+            else:
+                sr.acc = value if sr.acc is None else sr.acc + value
+            sr.row_done[s:s + z] = True
+            sr.costs[i] = dt
+            sr.t_first = rel0 if sr.t_first is None else min(sr.t_first, rel0)
+            sr.t_last = rel1 if sr.t_last is None else max(sr.t_last, rel1)
+            sr.remaining -= 1
+            remaining_total -= 1
+            if sr.remaining == 0:
+                sr.done = True
+                sr.value = sr.out if sr.stage.combine == "concat" else sr.acc
+            events.append(TaskEvent(sr.stage.name, i, s, z, wid, rel0, rel1, stolen))
+            busy[wid] += dt
+            ntasks[wid] += 1
+            steals[0] += int(stolen)
+
+        def worker(wid: int) -> None:
+            cursor = wid % nstages
+            while True:
+                sr = task = None
+                stolen = False
+                with cond:
+                    while True:
+                        if errors or remaining_total == 0:
+                            return
+                        for k in range(nstages):
+                            idx = (cursor + k) % nstages
+                            cand = order[idx]
+                            if cand.remaining == 0:
+                                continue
+                            got, stolen = try_pop(cand, wid)
+                            if got is not None:
+                                sr, task = cand, got
+                                # advance past this stage: drains ready
+                                # consumers next (streaming) and interleaves
+                                # branches.
+                                cursor = (idx + 1) % nstages
+                                break
+                        if task is not None:
+                            break
+                        cond.wait(timeout=0.05)
+                    inputs = {d.producer: (runs[d.producer].value
+                                           if d.kind == DEP_FULL
+                                           else runs[d.producer].out)
+                              for d in sr.stage.deps}
+                _, s, z = task
+                t0 = time.perf_counter()
+                try:
+                    value = sr.stage.op(inputs, s, z)
+                    t1 = time.perf_counter()
+                    with cond:
+                        record(sr, task, value, t1 - t0, wid,
+                               t0 - t0_run, t1 - t0_run, stolen)
+                        cond.notify_all()
+                except BaseException as e:  # surfaced to the caller below
+                    with cond:
+                        errors.append(e)
+                        cond.notify_all()
+                    return
+
+        threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+                   for w in range(n_workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        wall = time.perf_counter() - t0_run
+
+        stage_results = {
+            name: StageResult(value=sr.value, schedule=sr.schedule,
+                              per_task_costs=sr.costs, config=sr.cfg,
+                              t_first=sr.t_first, t_last=sr.t_last)
+            for name, sr in runs.items()
+        }
+        return DagResult(
+            values={n: r.value for n, r in stage_results.items()},
+            stages=stage_results, events=events, wall_time_s=wall,
+            steals=steals[0], per_worker_busy_s=busy, per_worker_tasks=ntasks)

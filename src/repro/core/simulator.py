@@ -26,15 +26,16 @@ the Fig 7–10 analogue benchmarks. Costs come from the real VEE operators
 from __future__ import annotations
 
 import heapq
+import math
 from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from .partitioners import make_partitioner
+from .partitioners import chunk_schedule, make_partitioner
 from .victim import make_victim_selector
 
-__all__ = ["SimOverheads", "SimResult", "simulate"]
+__all__ = ["SimOverheads", "SimResult", "simulate", "DagSimResult", "simulate_dag"]
 
 
 @dataclass(frozen=True)
@@ -224,3 +225,180 @@ def simulate(
         t, w = heapq.heappop(heap)
         finish[w] = max(finish[w], t)
     return SimResult(max(finish), busy, finish, steals=steals, queue_wait=queue_wait)
+
+
+# ---------------------------------------------------------------------------
+# pipeline-DAG makespan simulation (per-stage auto-tuning search target)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DagSimResult:
+    makespan: float
+    per_worker_busy: list[float]
+    stage_start: dict[str, float]
+    stage_finish: dict[str, float]
+    queue_wait: float = 0.0
+
+    def overlap_s(self, a: str, b: str) -> float:
+        return max(0.0, min(self.stage_finish[a], self.stage_finish[b])
+                   - max(self.stage_start[a], self.stage_start[b]))
+
+
+class _SimStage:
+    """Virtual-time state of one DAG stage."""
+
+    __slots__ = ("name", "deps", "chunks", "chunk_cost", "ptr", "row_time",
+                 "layout", "queue", "start", "finish", "last_end")
+
+    def __init__(self, name, deps, schedule, costs, layout):
+        self.name = name
+        self.deps = deps                      # list of (producer, kind)
+        self.chunks = [(int(s), int(z)) for s, z in schedule]
+        self.chunk_cost = [float(costs[s:s + z].sum()) for s, z in self.chunks]
+        self.ptr = 0                          # FIFO head (mirrors the executor)
+        self.row_time = np.full(len(costs), np.inf)  # completion time per row
+        self.layout = layout
+        self.queue = _SimQueue()
+        self.start = math.inf
+        self.finish = math.inf
+        self.last_end: dict[int, int] = {}    # per-worker locality tracking
+
+
+def _combo_of(cfg) -> tuple[str, str, str]:
+    if isinstance(cfg, tuple):
+        return cfg
+    return (cfg.technique, cfg.queue_layout, cfg.victim_strategy)
+
+
+def simulate_dag(
+    dag,
+    stage_costs: dict[str, np.ndarray] | None = None,
+    stage_configs: dict[str, tuple] | tuple | None = None,
+    n_workers: int = 20,
+    overheads: SimOverheads = SimOverheads(),
+    seed: int = 0,
+) -> DagSimResult:
+    """Simulate a PipelineDAG run on ``n_workers`` shared workers.
+
+    Mirrors PipelineExecutor's policy: per-stage chunk granularity from the
+    stage's technique, FIFO head gating on dependencies (full = producer
+    finished, elementwise = producer rows' completion times), and a rotating
+    stage cursor per worker (streaming + branch interleaving). Queue-access
+    overheads are serialized per stage: h_access for CENTRALIZED layouts,
+    h_local for distributed ones; the locality penalty applies when a worker
+    executes a chunk not contiguous with its previous range in that stage.
+
+    ``stage_configs`` maps stage name -> (technique, layout, victim) combo or
+    SchedulerConfig; a single combo applies to every stage; None means each
+    stage's own/dag default is STATIC/CENTRALIZED/SEQ.
+
+    ``stage_costs`` entries are per-row cost vectors. A stage without an
+    entry falls back to its own ``Stage.cost_of_range`` (evaluated per row),
+    else to uniform unit costs.
+    """
+    names = dag.stage_names
+    if stage_costs is None:
+        stage_costs = {}
+    if stage_configs is None:
+        stage_configs = {}
+    if isinstance(stage_configs, tuple):
+        stage_configs = {n: stage_configs for n in names}
+
+    stages: dict[str, _SimStage] = {}
+    for n in names:
+        st = dag.stages[n]
+        combo = _combo_of(stage_configs.get(n, ("STATIC", "CENTRALIZED", "SEQ")))
+        tech, layout, _ = combo
+        given = stage_costs.get(n)
+        if given is not None:
+            costs = np.asarray(given, dtype=float)
+        elif st.cost_of_range is not None:
+            costs = np.array([st.cost_of_range(i, 1) for i in range(st.n_rows)],
+                             dtype=float)
+        else:
+            costs = np.ones(st.n_rows)
+        if len(costs) != st.n_rows:
+            raise ValueError(f"stage {n!r}: {len(costs)} costs for {st.n_rows} rows")
+        schedule = chunk_schedule(tech, st.n_rows, n_workers, seed=seed)
+        stages[n] = _SimStage(n, [(d.producer, d.kind) for d in st.deps],
+                              schedule, costs, layout.upper())
+    order = [stages[n] for n in names]
+    nstages = len(order)
+    ov = overheads
+
+    def head_ready_time(st: _SimStage) -> float:
+        """Virtual time at which the FIFO-head chunk becomes runnable."""
+        s, z = st.chunks[st.ptr]
+        rt = 0.0
+        for prod, kind in st.deps:
+            p = stages[prod]
+            if kind == "full":
+                rt = max(rt, p.finish)
+            else:
+                seg = p.row_time[s:s + z]
+                rt = max(rt, float(seg.max()) if len(seg) else 0.0)
+        return rt
+
+    heap: list[tuple[float, int]] = [(0.0, w) for w in range(n_workers)]
+    heapq.heapify(heap)
+    pending: list[int] = []
+    cursor = [w % nstages for w in range(n_workers)]
+    busy = [0.0] * n_workers
+    queue_wait = 0.0
+    last_completion = 0.0
+    remaining = sum(len(st.chunks) for st in order)
+    for st in order:
+        if not st.chunks:
+            st.start = st.finish = 0.0
+
+    while remaining > 0:
+        if not heap:
+            raise RuntimeError("simulate_dag: no runnable chunk but work remains "
+                               "(unsatisfiable dependency)")
+        t, w = heapq.heappop(heap)
+        taken = None
+        for k in range(nstages):
+            idx = (cursor[w] + k) % nstages
+            st = order[idx]
+            if st.ptr >= len(st.chunks):
+                continue
+            if head_ready_time(st) <= t:
+                taken = (idx, st)
+                break
+        if taken is None:
+            pending.append(w)
+            continue
+        idx, st = taken
+        cursor[w] = (idx + 1) % nstages
+        s, z = st.chunks[st.ptr]
+        cost = st.chunk_cost[st.ptr]
+        st.ptr += 1
+        hold = ov.h_access if st.layout == "CENTRALIZED" else ov.h_local
+        t_acc = st.queue.access(t, hold)
+        queue_wait += max(0.0, (t_acc - hold) - t)
+        if st.last_end.get(w) is not None and st.last_end[w] != s:
+            cost *= 1.0 + ov.locality_penalty
+        st.last_end[w] = s + z
+        t_end = t_acc + cost
+        st.row_time[s:s + z] = t_end
+        st.start = min(st.start, t)
+        if st.ptr == len(st.chunks):
+            st.finish = t_end
+        busy[w] += cost
+        last_completion = max(last_completion, t_end)
+        remaining -= 1
+        heapq.heappush(heap, (t_end, w))
+        # a take advances a FIFO head (and row fills become visible as the
+        # clock reaches their t_end): re-scan parked workers now
+        if pending:
+            for pw in pending:
+                heapq.heappush(heap, (t, pw))
+            pending.clear()
+
+    return DagSimResult(
+        makespan=last_completion, per_worker_busy=busy,
+        stage_start={n: (0.0 if math.isinf(stages[n].start) else stages[n].start)
+                     for n in names},
+        stage_finish={n: (0.0 if math.isinf(stages[n].finish) else stages[n].finish)
+                      for n in names},
+        queue_wait=queue_wait)

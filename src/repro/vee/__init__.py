@@ -1,10 +1,21 @@
 """Vectorized execution engine: data + operators -> tasks -> DaphneSched."""
 
+from .apps import (
+    cc_iteration_dag,
+    cc_step_numpy,
+    connected_components,
+    connected_components_dag,
+    linear_regression,
+    linear_regression_dag,
+    recommendation_oracle,
+    recommendation_pipeline,
+)
 from .engine import VEE, PipelineResult
 from .sparse import CSRMatrix, rmat_graph, replicated_graph
-from .apps import connected_components, linear_regression, cc_step_numpy
 
 __all__ = [
     "VEE", "PipelineResult", "CSRMatrix", "rmat_graph", "replicated_graph",
     "connected_components", "linear_regression", "cc_step_numpy",
+    "cc_iteration_dag", "connected_components_dag", "linear_regression_dag",
+    "recommendation_pipeline", "recommendation_oracle",
 ]

@@ -23,11 +23,24 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..core.dag import (
+    DEP_ELEMENTWISE,
+    DEP_FULL,
+    DagResult,
+    PipelineDAG,
+    PipelineExecutor,
+    Stage,
+    StageDep,
+)
 from ..core.executor import SchedulerConfig
 from .engine import VEE, PipelineResult
 from .sparse import CSRMatrix
 
-__all__ = ["cc_step_numpy", "connected_components", "linear_regression"]
+__all__ = [
+    "cc_step_numpy", "connected_components", "linear_regression",
+    "cc_iteration_dag", "connected_components_dag", "linear_regression_dag",
+    "recommendation_pipeline", "recommendation_oracle",
+]
 
 
 def cc_step_numpy(G: CSRMatrix, c: np.ndarray) -> np.ndarray:
@@ -114,3 +127,162 @@ def linear_regression_oracle(num_rows: int, num_cols: int, lam: float = 0.001, s
     A = X1.T @ X1 + np.eye(num_cols) * lam
     b = X1.T @ y
     return np.linalg.solve(A, b)
+
+
+# ---------------------------------------------------------------------------
+# pipeline-DAG versions (core/dag.py): the paper's pipelines as stage graphs
+# ---------------------------------------------------------------------------
+
+def cc_iteration_dag(G: CSRMatrix, c_cur: np.ndarray) -> PipelineDAG:
+    """One CC iteration as a two-stage DAG.
+
+    ``propagate`` (sparse, skewed: per-row cost ~ nnz) produces the new
+    labels; ``changed`` (dense, uniform) counts label flips. The edge is
+    elementwise, so convergence checking streams over completed label
+    chunks instead of waiting for the propagation barrier — the classic
+    producer/consumer overlap the DAG runtime exists for.
+    """
+    n = G.n_rows
+    row_nnz = G.row_nnz()
+
+    def cost_of_range(start: int, size: int) -> float:
+        return float(row_nnz[start:start + size].sum() + size)
+
+    propagate = Stage(
+        "propagate", n,
+        lambda inputs, s, z: G.row_max_gather(c_cur, s, s + z),
+        combine="concat", cost_of_range=cost_of_range)
+    changed = Stage(
+        "changed", n,
+        lambda inputs, s, z: int((inputs["propagate"][s:s + z]
+                                  != c_cur[s:s + z]).sum()),
+        combine="sum", deps=(StageDep("propagate", DEP_ELEMENTWISE),))
+    return PipelineDAG([propagate, changed])
+
+
+def connected_components_dag(
+    G: CSRMatrix,
+    config: SchedulerConfig,
+    per_stage: dict | None = None,
+    max_iter: int = 100,
+    tuner=None,
+) -> tuple[np.ndarray, int, list[DagResult]]:
+    """Paper Listing 1 through the pipeline-DAG runtime.
+
+    ``per_stage`` maps stage name -> (technique, layout, victim) combo or
+    SchedulerConfig; ``tuner`` (a core.DagTuner) overrides it per iteration
+    and observes the iteration wall time (online per-stage selection).
+    """
+    n = G.n_rows
+    c = np.arange(1, n + 1, dtype=np.int64)
+    history: list[DagResult] = []
+    for it in range(1, max_iter + 1):
+        if tuner is not None:
+            per_stage = tuner.suggest()
+        dag = cc_iteration_dag(G, c)
+        res = PipelineExecutor(dag, config, per_stage).run()
+        if tuner is not None:
+            tuner.observe(res.wall_time_s)
+        history.append(res)
+        diff = int(res.values["changed"])
+        c = res.values["propagate"]
+        if diff == 0:
+            return c, it, history
+    return c, max_iter, history
+
+
+def linear_regression_dag(
+    num_rows: int,
+    num_cols: int,
+    config: SchedulerConfig,
+    lam: float = 0.001,
+    seed: int = 1,
+    per_stage: dict | None = None,
+) -> tuple[np.ndarray, DagResult]:
+    """Paper Listing 2 as a DAG: moments -> standardized syrk/gemv -> solve.
+
+    Stage ``moments`` partial-sums column sums and squared sums (for the
+    mean/std standardization); ``syrk_gemv`` depends on it in full and
+    accumulates X1^T X1 and X1^T y over row blocks. The tiny solve happens
+    on the host after the DAG.
+    """
+    rng = np.random.default_rng(seed)
+    XY = rng.uniform(0.0, 1.0, size=(num_rows, num_cols))
+    X, y = XY[:, :-1], XY[:, -1:]
+
+    def moments_op(inputs, s, z):
+        Xb = X[s:s + z]
+        return np.stack([Xb.sum(axis=0), (Xb ** 2).sum(axis=0)])
+
+    def syrk_gemv_op(inputs, s, z):
+        m = inputs["moments"]
+        mean = m[0] / num_rows
+        std = np.sqrt(np.maximum(m[1] / num_rows - mean ** 2, 0.0))
+        std[std == 0] = 1.0
+        Xb = (X[s:s + z] - mean) / std
+        Xb = np.concatenate([Xb, np.ones((Xb.shape[0], 1))], axis=1)
+        yb = y[s:s + z]
+        return np.concatenate([Xb.T @ Xb, Xb.T @ yb], axis=1)
+
+    dag = PipelineDAG([
+        Stage("moments", num_rows, moments_op, combine="sum"),
+        Stage("syrk_gemv", num_rows, syrk_gemv_op, combine="sum",
+              deps=(StageDep("moments", DEP_FULL),)),
+    ])
+    res = PipelineExecutor(dag, config, per_stage).run()
+    Ab = res.values["syrk_gemv"]
+    A, b = Ab[:, :-1], Ab[:, -1:]
+    A = A + np.eye(A.shape[0]) * lam
+    beta = np.linalg.solve(A, b)
+    return beta, res
+
+
+def recommendation_pipeline(
+    n_users: int,
+    n_items: int,
+    config: SchedulerConfig,
+    per_stage: dict | None = None,
+    density: float = 0.3,
+    seed: int = 0,
+) -> tuple[np.ndarray, DagResult]:
+    """A small DM+ML recommendation DAG with two independent branches.
+
+    ``item_norms`` (reduction over the ratings matrix) and ``user_bias``
+    (per-user mean) have no edge between them, so they overlap on the
+    shared pool; ``scores`` consumes item_norms in full and user_bias
+    elementwise and emits each user's top item. Returns (top_items, result).
+    """
+    rng = np.random.default_rng(seed)
+    R = rng.uniform(0.0, 1.0, size=(n_users, n_items))
+    R *= rng.uniform(size=(n_users, n_items)) < density
+
+    item_norms = Stage(
+        "item_norms", n_users,
+        lambda inputs, s, z: (R[s:s + z] ** 2).sum(axis=0), combine="sum")
+    user_bias = Stage(
+        "user_bias", n_users,
+        lambda inputs, s, z: R[s:s + z].mean(axis=1), combine="concat")
+
+    def scores_op(inputs, s, z):
+        norms = np.sqrt(inputs["item_norms"]) + 1e-9
+        bias = inputs["user_bias"][s:s + z]
+        return np.argmax(R[s:s + z] / norms - bias[:, None], axis=1)
+
+    scores = Stage(
+        "scores", n_users, scores_op, combine="concat",
+        deps=(StageDep("item_norms", DEP_FULL),
+              StageDep("user_bias", DEP_ELEMENTWISE)))
+    dag = PipelineDAG([item_norms, user_bias, scores])
+    res = PipelineExecutor(dag, config, per_stage).run()
+    return res.values["scores"], res
+
+
+def recommendation_oracle(n_users: int, n_items: int, density: float = 0.3,
+                          seed: int = 0) -> np.ndarray:
+    """Serial numpy oracle for recommendation_pipeline."""
+    rng = np.random.default_rng(seed)
+    R = rng.uniform(0.0, 1.0, size=(n_users, n_items))
+    R *= rng.uniform(size=(n_users, n_items)) < density
+    norms = np.sqrt((R ** 2).sum(axis=0)) + 1e-9
+    bias = R.mean(axis=1)
+    return np.argmax(R / norms - bias[:, None], axis=1)

@@ -57,9 +57,10 @@ def test_gc_keep_last(tmp_path):
 def test_elastic_restore_other_mesh(tmp_path):
     """Restore with shardings targeting a different (1x1) mesh layout."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh_compat
     save(tmp_path, 9, _tree())
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     shardings = {
         "params": {"w": NamedSharding(mesh, P("data", "model")),
                    "b": NamedSharding(mesh, P())},

