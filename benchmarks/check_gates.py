@@ -1,0 +1,51 @@
+"""Assert the CI-gated benchmark rows hold their invariants.
+
+    python benchmarks/check_gates.py artifacts/bench.csv
+
+Gates (both also property-tested in the tier-1 suite):
+  pipeline_dag_cc_regression    per-stage tuning never loses to the best
+                                uniform assignment (gain >= 0)
+  pipeline_server_mixed_load    weighted-fair p99 job latency <= FIFO p99
+                                on the mixed workload (p99_gain >= 0)
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+GATES = {
+    "pipeline_dag_cc_regression": r"gain=(-?[\d.]+)%",
+    "pipeline_server_mixed_load": r"p99_gain=(-?[\d.]+)%",
+}
+TOLERANCE = -1e-6  # simulator determinism should make these exact
+
+
+def main(path: str) -> int:
+    """Check every gated row in ``path``; returns a process exit code."""
+    rows = {}
+    for line in Path(path).read_text().splitlines()[1:]:
+        name, _, derived = line.split(",", 2)
+        rows[name] = derived
+    failures = 0
+    for name, pattern in GATES.items():
+        derived = rows.get(name)
+        if derived is None:
+            print(f"GATE MISSING: no `{name}` row in {path}")
+            failures += 1
+            continue
+        m = re.search(pattern, derived)
+        if m is None:
+            print(f"GATE MALFORMED: `{name}` lacks {pattern!r}: {derived}")
+            failures += 1
+            continue
+        gain = float(m.group(1))
+        verdict = "OK" if gain >= TOLERANCE else "FAIL"
+        print(f"{verdict}: {name} gain={gain:.3f}%")
+        failures += verdict == "FAIL"
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "artifacts/bench.csv"))

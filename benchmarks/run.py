@@ -1,13 +1,16 @@
 """Benchmark harness: one entry per paper table/figure + framework benches.
 
 Prints ``name,us_per_call,derived`` CSV rows and emits the paper-figure
-analogues + claims validation into artifacts/.
+analogues + claims validation into artifacts/ (bench.csv + bench.json —
+the JSON is uploaded as a CI artifact).
 
   fig7/fig89/fig10   paper_repro.py (simulated 20/56-core platforms,
                      measured task costs) — paper Figures 7a,7b,8,9,10
   partitioner_*      chunk-calculation overhead per DLS technique
   queue_*            centralized pop / steal costs (the lock path)
   executor_*         threaded end-to-end scheduling overhead
+  pipeline_dag_*     §9 DAG runtime: per-stage tuning vs global baseline
+  pipeline_server_*  §10 serving runtime: fair-share vs FIFO on mixed jobs
   cc_vee_*           the paper's CC hot loop on the real VEE
   schedule_quality_* device-side assignment quality (LPT vs round-robin)
   roofline_*         summary of artifacts/roofline.json (dry-run derived)
@@ -175,6 +178,58 @@ def bench_pipeline_dag(quick: bool = False) -> None:
         "independent branches active together (real pool, us)")
 
 
+def bench_pipeline_server(quick: bool = False) -> None:
+    """Multi-tenant serving rows (§10): p50/p99 job latency and makespan for
+    a mixed workload of concurrent heterogeneous jobs, weighted-fair vs
+    head-of-line FIFO.
+
+    ``pipeline_server_mixed_load`` is the CI-gated row: FIFO serializes
+    jobs and idles workers at stage barriers and straggler tails, so
+    weighted-fair sharing must achieve p99 <= FIFO on this workload.
+    """
+    import numpy as np
+
+    from repro.core import Job, PipelineDAG, Stage, StageDep, simulate_server
+
+    def mixed_job(name, n, scale, arrival, tenant, weight, seed):
+        rng = np.random.default_rng(seed)
+        m = max(8, n // 64)
+        dag = PipelineDAG([
+            Stage("prop", n, lambda i, s, z: None),
+            Stage("check", n, lambda i, s, z: None, combine="sum",
+                  deps=(StageDep("prop", "elementwise"),)),
+            Stage("reduce", m, lambda i, s, z: None, combine="sum",
+                  deps=(StageDep("prop", "full"),)),
+        ])
+        costs = {"prop": rng.pareto(1.2, n) * scale + scale * 0.1,
+                 "check": np.full(n, scale * 0.01),
+                 "reduce": np.full(m, scale * 2.0)}
+        return Job(name, dag, tenant=tenant, weight=weight,
+                   arrival_s=arrival, stage_costs=costs)
+
+    n_batch = 2000 if quick else 8000
+    n_small = n_batch // 10
+    jobs = [
+        mixed_job("batch", n_batch, 1e-5, 0.0, "analytics", 1.0, 0),
+        mixed_job("inter1", n_small, 1e-5, 0.002, "interactive", 4.0, 1),
+        mixed_job("inter2", n_small, 1e-5, 0.004, "interactive", 4.0, 2),
+    ]
+    if not quick:
+        jobs.append(mixed_job("inter3", n_small, 1e-5, 0.006,
+                              "interactive", 4.0, 3))
+
+    fifo = simulate_server(jobs, n_workers=20, arbiter="fifo")
+    fair = simulate_server(jobs, n_workers=20, arbiter="fair")
+    p = {f"{tag}_{q}": r.latency_percentile(q) * 1e6
+         for tag, r in (("fair", fair), ("fifo", fifo)) for q in (50, 99)}
+    row("pipeline_server_mixed_load", p["fair_99"],
+        f"p50_fair={p['fair_50']:.1f}us p99_fair={p['fair_99']:.1f}us "
+        f"p50_fifo={p['fifo_50']:.1f}us p99_fifo={p['fifo_99']:.1f}us "
+        f"makespan_fair={fair.makespan * 1e6:.1f}us "
+        f"makespan_fifo={fifo.makespan * 1e6:.1f}us "
+        f"jobs={len(jobs)} p99_gain={(p['fifo_99'] - p['fair_99']) / p['fifo_99'] * 100:.2f}%")
+
+
 def paper_figures() -> None:
     import paper_repro
     claims = paper_repro.main(scale=16)
@@ -202,6 +257,7 @@ def main(quick: bool = False) -> None:
     bench_queue_ops()
     bench_executor()
     bench_pipeline_dag(quick=quick)
+    bench_pipeline_server(quick=quick)
     if not quick:
         bench_cc_vee()
         bench_schedule_quality()
@@ -211,6 +267,9 @@ def main(quick: bool = False) -> None:
         f.write("name,us_per_call,derived\n")
         for n, u, d in ROWS:
             f.write(f"{n},{u:.3f},{d}\n")
+    (ART / "bench.json").write_text(json.dumps(
+        [{"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS],
+        indent=2) + "\n")
 
 
 if __name__ == "__main__":

@@ -3,8 +3,9 @@
 Two independent axes (paper §3): work *partitioning* (11 DLS techniques) and
 work *assignment* (centralized self-scheduling, or distributed queues with
 technique-driven work stealing and 4 victim-selection strategies), plus the
-distributed coordinator, the TPU device-schedule adaptation, and the
-auto-selection extension (the paper's stated future work).
+distributed coordinator, the TPU device-schedule adaptation, the
+auto-selection extension (the paper's stated future work), the pipeline-DAG
+runtime (DESIGN.md §9), and the multi-tenant serving runtime (DESIGN.md §10).
 """
 
 from .autotune import (
@@ -13,6 +14,7 @@ from .autotune import (
     default_search_space,
     select_offline,
     select_offline_dag,
+    select_offline_server,
 )
 from .coordinator import Coordinator, CoordinatorConfig, NodeSched
 from .dag import (
@@ -34,6 +36,21 @@ from .device_schedule import (
     rebalance,
 )
 from .executor import ExecutionStats, ScheduledExecutor, SchedulerConfig
+from .server import (
+    ARBITERS,
+    Arbiter,
+    FairShareArbiter,
+    FifoArbiter,
+    Job,
+    JobResult,
+    JobState,
+    PipelineServer,
+    PriorityArbiter,
+    ServerResult,
+    ServerTaskEvent,
+    job_stage_costs,
+    make_arbiter,
+)
 from .partitioners import (
     PARTITIONERS,
     Partitioner,
@@ -42,7 +59,15 @@ from .partitioners import (
     make_partitioner,
 )
 from .queues import QUEUE_LAYOUTS, CentralizedQueue, DistributedQueues
-from .simulator import DagSimResult, SimOverheads, SimResult, simulate, simulate_dag
+from .simulator import (
+    DagSimResult,
+    ServerSimResult,
+    SimOverheads,
+    SimResult,
+    simulate,
+    simulate_dag,
+    simulate_server,
+)
 from .task import RangeTask, tasks_from_schedule
 from .victim import VICTIM_STRATEGIES, VictimSelector, make_victim_selector
 
@@ -53,11 +78,15 @@ __all__ = [
     "RangeTask", "tasks_from_schedule",
     "SchedulerConfig", "ScheduledExecutor", "ExecutionStats",
     "SimOverheads", "SimResult", "simulate", "DagSimResult", "simulate_dag",
+    "ServerSimResult", "simulate_server",
     "DEP_FULL", "DEP_ELEMENTWISE", "Stage", "StageDep", "PipelineDAG",
     "PipelineExecutor", "StageResult", "DagResult", "TaskEvent",
+    "Job", "JobState", "JobResult", "ServerResult", "ServerTaskEvent",
+    "Arbiter", "FifoArbiter", "PriorityArbiter", "FairShareArbiter",
+    "ARBITERS", "make_arbiter", "PipelineServer", "job_stage_costs",
     "Coordinator", "CoordinatorConfig", "NodeSched",
     "build_task_table", "assign_chunks", "per_shard_tables", "rebalance",
     "cost_balanced_assignment",
     "select_offline", "OnlineTuner", "default_search_space",
-    "select_offline_dag", "DagTuner",
+    "select_offline_dag", "DagTuner", "select_offline_server",
 ]

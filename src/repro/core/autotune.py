@@ -20,6 +20,7 @@ We implement both modes as a beyond-paper feature:
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 from dataclasses import dataclass
 
@@ -27,14 +28,15 @@ import numpy as np
 
 from .executor import SchedulerConfig
 from .partitioners import PARTITIONERS
-from .simulator import SimOverheads, simulate, simulate_dag
+from .simulator import SimOverheads, simulate, simulate_dag, simulate_server
 from .victim import VICTIM_STRATEGIES
 
 __all__ = ["select_offline", "OnlineTuner", "default_search_space",
-           "select_offline_dag", "DagTuner"]
+           "select_offline_dag", "DagTuner", "select_offline_server"]
 
 
 def default_search_space(include_ss: bool = False):
+    """Yield every (technique, layout, victim) combo worth simulating (§6.6)."""
     techniques = [t for t in PARTITIONERS if include_ss or t != "SS"]
     layouts = ["CENTRALIZED", "PERCORE", "PERGROUP"]
     victims = list(VICTIM_STRATEGIES)
@@ -84,9 +86,11 @@ class OnlineTuner:
 
     @classmethod
     def default(cls, epsilon: float = 0.2, seed: int = 0) -> "OnlineTuner":
+        """Tuner over the full default search space."""
         return cls(list(default_search_space()), epsilon=epsilon, seed=seed)
 
     def suggest(self) -> tuple[str, str, str]:
+        """Pick the next arm: unexplored first, else epsilon-greedy."""
         unexplored = np.where(self._count == 0)[0]
         if len(unexplored) and self._rng.uniform() < 0.8:
             i = int(unexplored[0])
@@ -100,6 +104,7 @@ class OnlineTuner:
         return self.arms[i]
 
     def observe(self, wall_time: float) -> None:
+        """Reward the last suggested arm with its measured wall time."""
         i = self._last
         if i is None:
             return
@@ -108,10 +113,12 @@ class OnlineTuner:
 
     @property
     def best(self) -> tuple[str, str, str]:
+        """The arm with the lowest observed mean wall time."""
         means = np.where(self._count > 0, self._mean, np.inf)
         return self.arms[int(np.argmin(means))]
 
     def as_config(self, combo: tuple[str, str, str], n_workers: int, **kw) -> SchedulerConfig:
+        """Materialize a combo into a SchedulerConfig."""
         t, l, v = combo
         return SchedulerConfig(
             technique=t, queue_layout=l, victim_strategy=v, n_workers=n_workers, **kw
@@ -156,6 +163,7 @@ def select_offline_dag(
     names = dag.stage_names
 
     def score(assign: dict[str, tuple[str, str, str]]) -> float:
+        """Simulated DAG makespan of one per-stage assignment."""
         return simulate_dag(dag, stage_costs, assign, n_workers=n_workers,
                             overheads=overheads, seed=seed).makespan
 
@@ -178,6 +186,86 @@ def select_offline_dag(
         if not improved:
             break
     return assign, best, uniform
+
+
+# ---------------------------------------------------------------------------
+# per-job selection under contention (multi-tenant serving, §10)
+# ---------------------------------------------------------------------------
+
+def select_offline_server(
+    jobs,
+    n_workers: int,
+    arbiter="fair",
+    objective: str = "p99",
+    overheads: SimOverheads = SimOverheads(),
+    include_ss: bool = False,
+    seed: int = 0,
+    passes: int = 1,
+):
+    """Per-job, per-stage scheduling selection under inter-job contention.
+
+    Each job tuned in isolation (``select_offline_dag``) ignores that it
+    shares the pool: a combo that wins alone can lose under contention
+    (e.g. SS-like fine chunks amplify queue traffic exactly when other
+    jobs keep every worker busy). This search scores full serving replays:
+
+    1. Seed every job with its isolated ``select_offline_dag`` assignment
+       — the contention-blind baseline.
+    2. Coordinate-descend over (job, stage) pairs, re-simulating the whole
+       mixed workload with ``simulate_server`` under ``arbiter`` and
+       accepting a combo only when it improves ``objective``.
+
+    ``objective`` is ``"p99"`` / ``"p50"`` (percentile of per-job latency),
+    ``"mean"`` (mean latency), or ``"makespan"``. Returns
+    ``(per_job_assignment, tuned_score, baseline_score)`` where the
+    assignment maps job name -> {stage -> (technique, layout, victim)};
+    the tuned score is never worse than the baseline by construction.
+    """
+    from .server import job_stage_costs
+
+    def measure(res):
+        """Extract the objective value from a ServerSimResult."""
+        if objective == "makespan":
+            return res.makespan
+        if objective == "mean":
+            return float(np.mean(list(res.job_latency.values())))
+        if objective in ("p50", "p99"):
+            return res.latency_percentile(float(objective[1:]))
+        raise ValueError(f"unknown objective {objective!r}")
+
+    def score(assign):
+        """Objective of one per-job assignment under the full mixed replay."""
+        staged = [dataclasses.replace(j, per_stage=dict(assign[j.name]))
+                  for j in jobs]
+        return measure(simulate_server(
+            staged, n_workers=n_workers, arbiter=arbiter,
+            overheads=overheads, seed=seed))
+
+    space = list(dict.fromkeys(
+        (t, l, "SEQ") for t, l, _ in default_search_space(include_ss)))
+    assign = {}
+    for j in jobs:
+        iso, _, _ = select_offline_dag(
+            j.dag, job_stage_costs(j), n_workers=n_workers,
+            overheads=overheads, include_ss=include_ss, seed=seed, passes=1)
+        assign[j.name] = iso
+    baseline = best = score(assign)
+
+    for _ in range(max(1, passes)):
+        improved = False
+        for j in jobs:
+            for stage_name in j.dag.stage_names:
+                for c in space:
+                    if c == assign[j.name][stage_name]:
+                        continue
+                    trial = {n: dict(a) for n, a in assign.items()}
+                    trial[j.name][stage_name] = c
+                    v = score(trial)
+                    if v < best:
+                        best, assign, improved = v, trial, True
+        if not improved:
+            break
+    return assign, best, baseline
 
 
 @dataclass
@@ -205,9 +293,11 @@ class DagTuner:
 
     @classmethod
     def for_dag(cls, dag, epsilon: float = 0.2, seed: int = 0) -> "DagTuner":
+        """Build a tuner with one arm-set per stage of ``dag``."""
         return cls(list(dag.stage_names), epsilon=epsilon, seed=seed)
 
     def suggest(self) -> dict[str, tuple[str, str, str]]:
+        """Per-stage combos: the focus stage explores, the rest exploit."""
         self._focus = self.stage_names[self._round % len(self.stage_names)]
         self._round += 1
         out = {}
@@ -220,9 +310,11 @@ class DagTuner:
         return out
 
     def observe(self, wall_time: float) -> None:
+        """Attribute the DAG wall time to the deviating focus stage."""
         if self._focus is not None:
             self._tuners[self._focus].observe(wall_time)
 
     @property
     def best(self) -> dict[str, tuple[str, str, str]]:
+        """Current best combo per stage."""
         return {n: t.best for n, t in self._tuners.items()}

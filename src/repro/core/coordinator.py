@@ -30,6 +30,8 @@ __all__ = ["NodeSched", "Coordinator", "CoordinatorConfig"]
 
 @dataclass(frozen=True)
 class CoordinatorConfig:
+    """Cluster shape + cross-node/within-node scheduling knobs (Fig. 5)."""
+
     n_nodes: int = 2
     node_workers: int = 4
     technique: str = "GSS"          # cross-node partitioning technique
@@ -54,6 +56,7 @@ class NodeSched:
         self.alive = True
 
     def recv(self, msg: tuple) -> Any:
+        """Handle one coordinator message (the node's transport endpoint)."""
         if not self.alive:
             raise ConnectionError(f"node {self.node_id} is down")
         kind = msg[0]
@@ -75,6 +78,7 @@ class NodeSched:
         n = hi - lo
 
         def op(start: int, size: int):
+            """Apply the shipped program to one local row range."""
             return self.program(self.store, lo + start, size)
 
         sched = chunk_schedule(cfg.node_technique, n, cfg.node_workers, seed=cfg.seed)
@@ -106,6 +110,7 @@ class Coordinator:
 
     # -- API ----------------------------------------------------------------------
     def broadcast(self, name: str, arr: np.ndarray) -> None:
+        """Replicate ``arr`` to every alive node's store."""
         for nd in self.nodes:
             if nd.alive:
                 self._send(nd, ("broadcast", name, arr))
@@ -118,6 +123,7 @@ class Coordinator:
                 self._send(nd, ("distribute", name, arr[idx]))
 
     def ship_program(self, fn: Callable) -> None:
+        """Install the per-range operator on every alive node."""
         for nd in self.nodes:
             if nd.alive:
                 self._send(nd, ("program", fn))
@@ -151,4 +157,5 @@ class Coordinator:
 
     # -- fault injection (tests) ---------------------------------------------------
     def kill_node(self, node_id: int) -> None:
+        """Mark a node dead (fault-injection for tests)."""
         self.nodes[node_id].alive = False

@@ -146,6 +146,7 @@ class PipelineDAG:
 
     @property
     def stage_names(self) -> list[str]:
+        """Stage names in topological order."""
         return list(self.order)
 
 
@@ -165,6 +166,8 @@ class TaskEvent:
 
 @dataclass
 class StageResult:
+    """Per-stage outcome: combined value, realized schedule, measured costs."""
+
     value: Any
     schedule: np.ndarray        # (n_chunks, 2) (start, size) actually used
     per_task_costs: np.ndarray  # measured seconds per chunk
@@ -175,6 +178,8 @@ class StageResult:
 
 @dataclass
 class DagResult:
+    """Whole-DAG outcome: stage values/results, event timeline, pool stats."""
+
     values: dict[str, Any]
     stages: dict[str, StageResult]
     events: list[TaskEvent]
@@ -184,6 +189,7 @@ class DagResult:
     per_worker_tasks: list[int]
 
     def span(self, stage: str) -> tuple[float, float]:
+        """(first chunk start, last chunk end) of ``stage``, seconds from run start."""
         r = self.stages[stage]
         if r.t_first is None:
             return (0.0, 0.0)
@@ -197,7 +203,12 @@ class DagResult:
 
 
 class _StageRun:
-    """Mutable execution state of one stage (guarded by the executor lock)."""
+    """Mutable execution state of one stage (guarded by the runtime's lock).
+
+    Shared between PipelineExecutor (one DAG) and core/server.py's
+    PipelineServer (many DAGs on one pool): both pop chunks via _try_pop
+    and fold results back via record().
+    """
 
     __slots__ = ("stage", "cfg", "schedule", "tasks", "queues", "home",
                  "selector", "row_done", "remaining", "out", "acc", "value",
@@ -249,6 +260,77 @@ class _StageRun:
         self.t_first: float | None = None
         self.t_last: float | None = None
 
+    def record(self, task, value, dt, rel0, rel1) -> None:
+        """Fold one completed chunk into the stage state (caller holds lock)."""
+        i, s, z = task
+        if self.stage.combine == "concat":
+            v = np.asarray(value)
+            if v.shape[:1] != (z,):
+                raise ValueError(
+                    f"stage {self.stage.name!r}: concat op must return "
+                    f"(size, ...) rows, got shape {v.shape} for size {z}")
+            if self.out is None:
+                self.out = np.empty((self.stage.n_rows,) + v.shape[1:], v.dtype)
+            self.out[s:s + z] = v
+        else:
+            self.acc = value if self.acc is None else self.acc + value
+        self.row_done[s:s + z] = True
+        self.costs[i] = dt
+        self.t_first = rel0 if self.t_first is None else min(self.t_first, rel0)
+        self.t_last = rel1 if self.t_last is None else max(self.t_last, rel1)
+        self.remaining -= 1
+        if self.remaining == 0:
+            self.done = True
+            self.value = self.out if self.stage.combine == "concat" else self.acc
+
+
+def _task_ready(sr: _StageRun, runs: dict[str, _StageRun], task) -> bool:
+    """Is this chunk's every dependency satisfied (within one job's runs)?"""
+    _, s, z = task
+    for d in sr.stage.deps:
+        p = runs[d.producer]
+        if d.kind == DEP_FULL:
+            if not p.done:
+                return False
+        elif not p.row_done[s:s + z].all():
+            return False
+    return True
+
+
+def _try_pop(sr: _StageRun, runs: dict[str, _StageRun], wid: int):
+    """Pop the next runnable chunk for worker ``wid`` (FIFO head of its
+    home queue, else a victim's tail) — or (None, False)."""
+    q = sr.queues[sr.home[wid] if len(sr.home) > wid else 0]
+    if q and _task_ready(sr, runs, q[0]):
+        return q.popleft(), False
+    if sr.selector is not None:
+        for v in sr.selector.candidates(sr.home[wid]):
+            vq = sr.queues[v]
+            if vq and _task_ready(sr, runs, vq[-1]):
+                return vq.pop(), True
+    return None, False
+
+
+def _stage_inputs(sr: _StageRun, runs: dict[str, _StageRun]) -> dict:
+    """Producer outputs visible to an op: finalized value (full deps) or the
+    partially-filled row buffer (elementwise deps)."""
+    return {d.producer: (runs[d.producer].value if d.kind == DEP_FULL
+                         else runs[d.producer].out)
+            for d in sr.stage.deps}
+
+
+def _resolve_stage_config(base: SchedulerConfig, stage: Stage, override):
+    """Layer per-stage overrides over ``base`` (pool shape always wins)."""
+    chosen = override if override is not None else stage.config
+    if chosen is None:
+        return base
+    if isinstance(chosen, tuple):
+        t, l, v = chosen
+        return dataclasses.replace(
+            base, technique=t, queue_layout=l, victim_strategy=v)
+    return dataclasses.replace(
+        chosen, n_workers=base.n_workers, numa_domains=base.numa_domains)
+
 
 class PipelineExecutor:
     """Run a PipelineDAG on one shared worker pool with streaming.
@@ -273,18 +355,11 @@ class PipelineExecutor:
         self._per_stage = dict(per_stage or {})
 
     def _resolve(self, stage: Stage) -> SchedulerConfig:
-        chosen = self._per_stage.get(stage.name, stage.config)
-        if chosen is None:
-            return self.config
-        if isinstance(chosen, tuple):
-            t, l, v = chosen
-            return dataclasses.replace(
-                self.config, technique=t, queue_layout=l, victim_strategy=v)
-        return dataclasses.replace(
-            chosen, n_workers=self.config.n_workers,
-            numa_domains=self.config.numa_domains)
+        return _resolve_stage_config(
+            self.config, stage, self._per_stage.get(stage.name))
 
     def run(self) -> DagResult:
+        """Execute every stage to completion on the shared pool."""
         runs = {name: _StageRun(self.dag.stages[name], self._resolve(self.dag.stages[name]),
                                 self._domains)
                 for name in self.dag.order}
@@ -300,59 +375,19 @@ class PipelineExecutor:
         steals = [0]
         t0_run = time.perf_counter()
 
-        def task_ready(sr: _StageRun, task: tuple[int, int, int]) -> bool:
-            _, s, z = task
-            for d in sr.stage.deps:
-                p = runs[d.producer]
-                if d.kind == DEP_FULL:
-                    if not p.done:
-                        return False
-                elif not p.row_done[s:s + z].all():
-                    return False
-            return True
-
-        def try_pop(sr: _StageRun, wid: int):
-            """Pop the next runnable chunk for worker ``wid`` (FIFO head of
-            its home queue, else a victim's tail) — or None."""
-            q = sr.queues[sr.home[wid] if len(sr.home) > wid else 0]
-            if q and task_ready(sr, q[0]):
-                return q.popleft(), False
-            if sr.selector is not None:
-                for v in sr.selector.candidates(sr.home[wid]):
-                    vq = sr.queues[v]
-                    if vq and task_ready(sr, vq[-1]):
-                        return vq.pop(), True
-            return None, False
-
         def record(sr: _StageRun, task, value, dt, wid, rel0, rel1, stolen):
+            """Fold a chunk into its stage and the run-wide stats (lock held)."""
             nonlocal remaining_total
             i, s, z = task
-            if sr.stage.combine == "concat":
-                v = np.asarray(value)
-                if v.shape[:1] != (z,):
-                    raise ValueError(
-                        f"stage {sr.stage.name!r}: concat op must return "
-                        f"(size, ...) rows, got shape {v.shape} for size {z}")
-                if sr.out is None:
-                    sr.out = np.empty((sr.stage.n_rows,) + v.shape[1:], v.dtype)
-                sr.out[s:s + z] = v
-            else:
-                sr.acc = value if sr.acc is None else sr.acc + value
-            sr.row_done[s:s + z] = True
-            sr.costs[i] = dt
-            sr.t_first = rel0 if sr.t_first is None else min(sr.t_first, rel0)
-            sr.t_last = rel1 if sr.t_last is None else max(sr.t_last, rel1)
-            sr.remaining -= 1
+            sr.record(task, value, dt, rel0, rel1)
             remaining_total -= 1
-            if sr.remaining == 0:
-                sr.done = True
-                sr.value = sr.out if sr.stage.combine == "concat" else sr.acc
             events.append(TaskEvent(sr.stage.name, i, s, z, wid, rel0, rel1, stolen))
             busy[wid] += dt
             ntasks[wid] += 1
             steals[0] += int(stolen)
 
         def worker(wid: int) -> None:
+            """Pool thread: rotate over stages, pop runnable chunks, execute."""
             cursor = wid % nstages
             while True:
                 sr = task = None
@@ -366,7 +401,7 @@ class PipelineExecutor:
                             cand = order[idx]
                             if cand.remaining == 0:
                                 continue
-                            got, stolen = try_pop(cand, wid)
+                            got, stolen = _try_pop(cand, runs, wid)
                             if got is not None:
                                 sr, task = cand, got
                                 # advance past this stage: drains ready
@@ -377,10 +412,7 @@ class PipelineExecutor:
                         if task is not None:
                             break
                         cond.wait(timeout=0.05)
-                    inputs = {d.producer: (runs[d.producer].value
-                                           if d.kind == DEP_FULL
-                                           else runs[d.producer].out)
-                              for d in sr.stage.deps}
+                    inputs = _stage_inputs(sr, runs)
                 _, s, z = task
                 t0 = time.perf_counter()
                 try:

@@ -38,6 +38,8 @@ class SchedulerConfig:
 
 @dataclass
 class ExecutionStats:
+    """Per-run counters: wall time, per-worker load, steal/contention stats."""
+
     wall_time_s: float = 0.0
     per_worker_tasks: list[int] = field(default_factory=list)
     per_worker_busy_s: list[float] = field(default_factory=list)
@@ -65,6 +67,7 @@ class ScheduledExecutor:
         self._domains = list(d) if d is not None else [0] * config.n_workers
 
     def run(self, tasks: list[RangeTask]) -> tuple[dict[int, object], ExecutionStats]:
+        """Run ``tasks`` to completion; returns ({task_id: value}, stats)."""
         cfg = self.config
         results: dict[int, object] = {}
         res_lock = threading.Lock()
@@ -74,6 +77,7 @@ class ScheduledExecutor:
         )
 
         def record(worker_id: int, task: RangeTask) -> None:
+            """Run one task and fold its result/stats in (worker thread)."""
             t0 = time.perf_counter()
             value = task.run()
             dt = time.perf_counter() - t0
@@ -88,6 +92,7 @@ class ScheduledExecutor:
             queue = CentralizedQueue(tasks, part)
 
             def worker(worker_id: int) -> None:
+                """Drain technique-sized chunks off the shared queue."""
                 while True:
                     chunk = queue.pop(worker_id)
                     if not chunk:
@@ -111,6 +116,7 @@ class ScheduledExecutor:
             )
 
             def worker(worker_id: int) -> None:
+                """Drain the home queue, then steal in victim order."""
                 home = queues.owner_of(worker_id)
                 while True:
                     t = queues.pop_local(worker_id)

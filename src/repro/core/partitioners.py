@@ -90,10 +90,12 @@ class Partitioner:
     # -- conveniences ---------------------------------------------------------
     @property
     def remaining(self) -> int:
+        """Tasks not yet handed out."""
         with self._lock:
             return self._remaining
 
     def reset(self) -> None:
+        """Restore the initial state (reproduces the exact chunk sequence)."""
         with self._lock:
             self._remaining = self.n_tasks
             self._scheduled = 0
@@ -313,6 +315,7 @@ class PLS(Partitioner):
         self._speed = 1.0
 
     def update(self, **runtime_info) -> None:
+        """Feed the measured relative worker ``speed`` (clipped to [0.25, 4])."""
         s = runtime_info.get("speed")
         if s:
             self._speed = float(np.clip(s, 0.25, 4.0))
@@ -339,6 +342,7 @@ class PSS(Partitioner):
         self._active = n_workers
 
     def update(self, **runtime_info) -> None:
+        """Feed the expected number of ``active_workers`` competing for work."""
         a = runtime_info.get("active_workers")
         if a:
             self._active = max(1, int(a))
@@ -364,6 +368,7 @@ PARTITIONERS: dict[str, type[Partitioner]] = {
 
 
 def make_partitioner(name: str, n_tasks: int, n_workers: int, seed: int = 0, **kw) -> Partitioner:
+    """Build a partitioner by name from PARTITIONERS (DESIGN.md §2/§4)."""
     try:
         cls = PARTITIONERS[name.upper()]
     except KeyError:

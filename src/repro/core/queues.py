@@ -46,6 +46,7 @@ class CentralizedQueue:
         self.pops = 0
 
     def pop(self, worker_id: int = 0) -> list[RangeTask]:
+        """Take the next technique-sized chunk off the shared queue."""
         acquired = self._lock.acquire(blocking=False)
         if not acquired:
             self._lock.acquire()
@@ -167,9 +168,11 @@ class DistributedQueues:
 
     # -- worker API --------------------------------------------------------------
     def owner_of(self, worker_id: int) -> int:
+        """Home queue id of ``worker_id`` (its own, or its NUMA domain's)."""
         return self._home[worker_id]
 
     def pop_local(self, worker_id: int) -> RangeTask | None:
+        """Take one task from the head of the worker's home queue."""
         q = self._queues[self.owner_of(worker_id)]
         with q.lock:
             return q.dq.popleft() if q.dq else None
@@ -190,9 +193,11 @@ class DistributedQueues:
             return stolen
 
     def queue_sizes(self) -> list[int]:
+        """Current length of every queue (diagnostics)."""
         return [len(q.dq) for q in self._queues]
 
     def push_local(self, worker_id: int, tasks: list[RangeTask]) -> None:
+        """Append ``tasks`` to the worker's home queue (steal returns)."""
         q = self._queues[self.owner_of(worker_id)]
         with q.lock:
             q.dq.extend(tasks)

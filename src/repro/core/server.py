@@ -1,0 +1,484 @@
+"""Multi-tenant pipeline serving runtime (DESIGN.md §10).
+
+DaphneSched schedules one pipeline at a time; a production deployment
+serves *many* IDA pipelines from many tenants on one worker pool. This
+module adds the job level above the §9 DAG runtime:
+
+  ``Job``            a PipelineDAG plus serving metadata: priority, tenant,
+                     fair-share weight, arrival offset, optional deadline,
+                     per-stage scheduling overrides, and (for virtual-time
+                     replay) per-stage cost vectors.
+  ``PipelineServer`` admits many Jobs onto ONE shared worker pool. Each
+                     job's stages keep their own queues/techniques (intra-job
+                     scheduling stays pure DaphneSched, §2/§9); an inter-job
+                     *arbiter* decides which job a free worker serves next.
+  ``Arbiter``        the pluggable inter-job policy. Three built-ins:
+
+    fifo       head-of-line FCFS — only the oldest unfinished job is served
+               (models the pre-§10 one-pipeline-at-a-time regime; idles
+               workers at that job's stage barriers and straggler tails).
+    priority   strict priority (higher ``Job.priority`` first), backfilling
+               lower priorities only when no higher-priority chunk is
+               runnable, with an optional starvation guard: a job unserved
+               for ``starve_after_s`` jumps the priority order for one chunk.
+    fair       weighted-fair sharing by tenant: the next chunk goes to the
+               backlogged tenant with the least service/weight (start-time
+               fair queueing on the chunk timeline), FIFO within a tenant.
+               Tenants resume from the current minimum after idling (no
+               banked credit).
+
+The job/task split mirrors Canary's finding that job-level admission and
+priority compose with task-level self-scheduling, and Trident's adaptive
+cross-pipeline arbitration (PAPERS.md). ``core/simulator.py:simulate_server``
+replays the same arbiters in virtual time for policy search, and
+``core/autotune.py:select_offline_server`` tunes per-job stage configs
+under contention.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from .dag import (
+    PipelineDAG,
+    _resolve_stage_config,
+    _stage_inputs,
+    _StageRun,
+    _try_pop,
+)
+from .executor import SchedulerConfig
+
+__all__ = [
+    "Job", "JobState", "JobResult", "ServerResult", "ServerTaskEvent",
+    "Arbiter", "FifoArbiter", "PriorityArbiter", "FairShareArbiter",
+    "ARBITERS", "make_arbiter", "PipelineServer", "job_stage_costs",
+]
+
+
+@dataclass(frozen=True)
+class Job:
+    """One admitted pipeline: a PipelineDAG plus serving metadata.
+
+    ``priority`` orders jobs under the strict-priority arbiter (larger =
+    more urgent). ``tenant``/``weight`` drive weighted-fair sharing (jobs of
+    one tenant should carry the tenant's weight). ``arrival_s`` is the
+    job's arrival offset from serve start (real seconds for PipelineServer,
+    virtual seconds for simulate_server). ``per_stage`` overrides stage
+    scheduling as in PipelineExecutor. ``stage_costs`` (stage -> per-row
+    cost vector) feeds virtual-time replay; stages without an entry fall
+    back to ``Stage.cost_of_range``, else unit costs.
+    """
+
+    name: str
+    dag: PipelineDAG = field(compare=False)
+    priority: int = 0
+    tenant: str = "default"
+    weight: float = 1.0
+    arrival_s: float = 0.0
+    deadline_s: float | None = None
+    per_stage: dict[str, SchedulerConfig | tuple[str, str, str]] | None = \
+        field(compare=False, default=None)
+    stage_costs: dict[str, np.ndarray] | None = field(compare=False, default=None)
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"job {self.name!r}: weight must be > 0")
+
+
+def job_stage_costs(job: Job) -> dict[str, np.ndarray]:
+    """Per-row cost vectors for every stage of ``job`` (simulation inputs)."""
+    out: dict[str, np.ndarray] = {}
+    for name in job.dag.stage_names:
+        st = job.dag.stages[name]
+        given = (job.stage_costs or {}).get(name)
+        if given is not None:
+            costs = np.asarray(given, dtype=float)
+            if len(costs) != st.n_rows:
+                raise ValueError(
+                    f"job {job.name!r} stage {name!r}: {len(costs)} costs "
+                    f"for {st.n_rows} rows")
+        elif st.cost_of_range is not None:
+            costs = np.array([st.cost_of_range(i, 1) for i in range(st.n_rows)],
+                             dtype=float)
+        else:
+            costs = np.ones(st.n_rows)
+        out[name] = costs
+    return out
+
+
+@dataclass
+class JobState:
+    """Arbiter-visible accounting for one admitted job.
+
+    Shared by the threaded server and the virtual-time simulator: arbiters
+    order these and are charged through them, so a policy behaves
+    identically under both clocks.
+    """
+
+    job: Job
+    seq: int                       # submission order (FIFO tie-break)
+    arrival: float
+    service: float = 0.0           # accumulated busy seconds
+    last_service: float | None = None
+    boosted: bool = False          # starvation guard fired at the last order
+    done: bool = False
+    finish: float | None = None
+
+
+class Arbiter:
+    """Inter-job scheduling policy: ranks admitted jobs for the next pop.
+
+    ``order`` returns the admitted unfinished jobs most-preferred first; a
+    worker tries jobs in that order and takes the first runnable chunk
+    (returning a prefix restricts backfilling — FIFO returns only the
+    head). ``charge`` observes ``dt`` seconds of service done for a job at
+    time ``now``; both clocks are seconds since serve start.
+    """
+
+    name = "base"
+
+    def order(self, jobs: list[JobState], now: float) -> list[JobState]:
+        """Rank ``jobs`` (admitted, unfinished) most-preferred first."""
+        raise NotImplementedError
+
+    def charge(self, js: JobState, dt: float, now: float) -> None:
+        """Account ``dt`` seconds of service delivered to ``js``."""
+        js.service += dt
+        js.last_service = now
+
+
+class FifoArbiter(Arbiter):
+    """Head-of-line FCFS: only the oldest unfinished job is ever served.
+
+    This is the one-pipeline-at-a-time baseline the repo had before §10:
+    workers idle whenever the head job's runnable chunks run out (stage
+    barriers, straggler tails) even if later jobs have work — exactly the
+    capacity loss the concurrent arbiters exist to recover.
+    """
+
+    name = "fifo"
+
+    def order(self, jobs: list[JobState], now: float) -> list[JobState]:
+        """Return just the head job (earliest arrival, then submit order)."""
+        if not jobs:
+            return []
+        return [min(jobs, key=lambda j: (j.arrival, j.seq))]
+
+
+class PriorityArbiter(Arbiter):
+    """Strict priority with an optional starvation guard.
+
+    Higher ``Job.priority`` is served first; equal priorities run FCFS.
+    Lower-priority chunks run only when no higher-priority chunk is
+    runnable (backfilling at barriers). With ``starve_after_s`` set, a job
+    unserved for that long jumps the order for one chunk (its events carry
+    ``boosted=True``), bounding starvation under a saturating
+    high-priority stream.
+    """
+
+    name = "priority"
+
+    def __init__(self, starve_after_s: float | None = None):
+        self.starve_after_s = starve_after_s
+
+    def order(self, jobs: list[JobState], now: float) -> list[JobState]:
+        """Rank by (starving, -priority, arrival, seq)."""
+        for js in jobs:
+            waited = now - (js.last_service if js.last_service is not None
+                            else js.arrival)
+            js.boosted = (self.starve_after_s is not None
+                          and waited > self.starve_after_s)
+        return sorted(jobs, key=lambda js: (not js.boosted, -js.job.priority,
+                                            js.arrival, js.seq))
+
+
+class FairShareArbiter(Arbiter):
+    """Weighted-fair sharing by tenant (start-time fair queueing).
+
+    Every tenant accumulates normalized service ``v = service / weight``;
+    the next chunk goes to the backlogged tenant with the smallest ``v``,
+    FIFO within the tenant. While two tenants stay backlogged their
+    normalized-service gap is bounded by the largest chunk cost times
+    ``(1/w_i + 1/w_j)`` per concurrent worker (property-tested in
+    tests/test_server.py). A tenant (re)joining after idle time resumes
+    from the current backlogged minimum, so idling banks no credit.
+    """
+
+    name = "fair"
+
+    def __init__(self):
+        self._v: dict[str, float] = {}
+        self._active: set[str] = set()
+
+    def order(self, jobs: list[JobState], now: float) -> list[JobState]:
+        """Rank by (tenant normalized service, arrival, seq)."""
+        present = {js.job.tenant for js in jobs}
+        carried = [self._v[t] for t in (present & self._active) if t in self._v]
+        floor = min(carried, default=0.0)
+        for t in present:
+            if t in self._active and t in self._v:
+                continue  # continuously backlogged: keep its v
+            self._v[t] = max(self._v.get(t, 0.0), floor)
+        self._active = present
+        return sorted(jobs, key=lambda js: (self._v[js.job.tenant],
+                                            js.arrival, js.seq))
+
+    def charge(self, js: JobState, dt: float, now: float) -> None:
+        """Charge the job and advance its tenant's normalized service."""
+        super().charge(js, dt, now)
+        self._v[js.job.tenant] = self._v.get(js.job.tenant, 0.0) + dt / js.job.weight
+
+
+ARBITERS = {"fifo": FifoArbiter, "priority": PriorityArbiter,
+            "fair": FairShareArbiter}
+
+
+def make_arbiter(spec: str | Arbiter, **kwargs) -> Arbiter:
+    """Instantiate an arbiter from a name in ARBITERS (or pass one through).
+
+    Arbiters carry accounting state — build a fresh one per serve/simulate
+    call (passing a name does this for you).
+    """
+    if isinstance(spec, Arbiter):
+        return spec
+    try:
+        return ARBITERS[spec.lower()](**kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown arbiter {spec!r}; options: {sorted(ARBITERS)}") from None
+
+
+@dataclass(frozen=True)
+class ServerTaskEvent:
+    """One executed chunk on the serving timeline (job-level TaskEvent)."""
+
+    job: str
+    tenant: str
+    stage: str
+    task_id: int
+    start: int
+    size: int
+    worker: int
+    t_start: float   # seconds since serve() began
+    t_end: float
+    stolen: bool = False
+    boosted: bool = False  # starvation guard lifted this job past priority
+
+
+@dataclass
+class JobResult:
+    """Per-job outcome: stage values plus latency/deadline accounting."""
+
+    name: str
+    values: dict[str, Any]
+    arrival_s: float
+    finish_s: float
+    latency_s: float
+    service_s: float
+    n_tasks: int
+    deadline_met: bool | None = None  # None when the job had no deadline
+
+
+@dataclass
+class ServerResult:
+    """Outcome of one PipelineServer.serve drain."""
+
+    jobs: dict[str, JobResult]
+    events: list[ServerTaskEvent]
+    wall_time_s: float
+    makespan_s: float              # last finish minus first arrival
+    per_worker_busy_s: list[float]
+    per_worker_tasks: list[int]
+    steals: int
+    tenant_service_s: dict[str, float]
+
+    def latencies(self) -> dict[str, float]:
+        """Job name -> latency (finish minus arrival) in seconds."""
+        return {n: r.latency_s for n, r in self.jobs.items()}
+
+    def latency_percentile(self, q: float) -> float:
+        """Percentile ``q`` (0-100) over per-job latencies."""
+        return float(np.percentile(list(self.latencies().values()), q))
+
+
+class PipelineServer:
+    """Serve many pipeline Jobs concurrently on one shared worker pool.
+
+    ``config`` supplies the pool shape (n_workers, numa_domains, seed) and
+    the default per-stage scheduling tuple; each job's ``per_stage`` (or
+    its stages' own configs) override it exactly as in PipelineExecutor.
+    ``arbiter`` is a name in ARBITERS or an Arbiter instance;
+    ``arbiter_kwargs`` are forwarded when a name is given.
+
+    ``serve(jobs)`` blocks until every job drains and returns a
+    ServerResult. Job ``arrival_s`` offsets are honoured in real time:
+    workers never touch a job before it arrives.
+    """
+
+    def __init__(self, config: SchedulerConfig,
+                 arbiter: str | Arbiter = "fair",
+                 arbiter_kwargs: dict | None = None):
+        self.config = config
+        d = config.numa_domains
+        self._domains = list(d) if d is not None else [0] * config.n_workers
+        self._arbiter_spec = arbiter
+        self._arbiter_kwargs = dict(arbiter_kwargs or {})
+
+    def serve(self, jobs: list[Job]) -> ServerResult:
+        """Admit ``jobs`` and run the pool until every job completes."""
+        names = [j.name for j in jobs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate job names in {names}")
+        arbiter = make_arbiter(self._arbiter_spec, **self._arbiter_kwargs)
+        states = [JobState(job=j, seq=i, arrival=float(j.arrival_s))
+                  for i, j in enumerate(jobs)]
+        runs: dict[str, dict[str, _StageRun]] = {}
+        stage_order: dict[str, list[_StageRun]] = {}
+        job_left: dict[str, int] = {}
+        for j in jobs:
+            per = dict(j.per_stage or {})
+            jr = {name: _StageRun(
+                j.dag.stages[name],
+                _resolve_stage_config(self.config, j.dag.stages[name],
+                                      per.get(name)),
+                self._domains)
+                for name in j.dag.order}
+            runs[j.name] = jr
+            stage_order[j.name] = [jr[n] for n in j.dag.order]
+            job_left[j.name] = sum(sr.remaining for sr in jr.values())
+
+        n_workers = self.config.n_workers
+        cond = threading.Condition()
+        total_left = [sum(job_left.values())]  # cell: workers decrement it
+        events: list[ServerTaskEvent] = []
+        errors: list[BaseException] = []
+        busy = [0.0] * n_workers
+        ntasks = [0] * n_workers
+        job_tasks = {j.name: 0 for j in jobs}
+        job_end = {j.name: 0.0 for j in jobs}
+        steals = [0]
+        cursors: dict[tuple[int, int], int] = {}
+        t0_run = time.perf_counter()
+
+        # jobs with no work at all complete the moment they arrive
+        for js in states:
+            if job_left[js.job.name] == 0:
+                js.done, js.finish = True, js.arrival
+
+        def pick(wid: int, t: float):
+            """Choose (state, stage-run, task, stolen, boosted) per the
+            arbiter; ``boosted`` is snapshotted here because other workers
+            re-run order() (which rewrites JobState.boosted) while this
+            chunk executes outside the lock."""
+            admitted = [js for js in states
+                        if js.arrival <= t and not js.done]
+            for js in arbiter.order(admitted, t):
+                jname = js.job.name
+                jruns = stage_order[jname]
+                ns = len(jruns)
+                cur = cursors.get((wid, js.seq), wid % ns)
+                for k in range(ns):
+                    idx = (cur + k) % ns
+                    sr = jruns[idx]
+                    if sr.remaining == 0:
+                        continue
+                    got, stolen = _try_pop(sr, runs[jname], wid)
+                    if got is not None:
+                        cursors[(wid, js.seq)] = (idx + 1) % ns
+                        return js, sr, got, stolen, js.boosted
+            return None
+
+        def worker(wid: int) -> None:
+            """Pool thread: serve arbiter-ordered jobs until the pool drains."""
+            while True:
+                choice = None
+                with cond:
+                    while True:
+                        if errors or total_left[0] == 0:
+                            return
+                        t = time.perf_counter() - t0_run
+                        choice = pick(wid, t)
+                        if choice is not None:
+                            break
+                        pending = [js.arrival - t for js in states
+                                   if js.arrival > t]
+                        cond.wait(timeout=min([0.05] + [max(w, 1e-4)
+                                                        for w in pending]))
+                    js, sr, task, stolen, boosted = choice
+                    inputs = _stage_inputs(sr, runs[js.job.name])
+                _, s, z = task
+                t0 = time.perf_counter()
+                try:
+                    value = sr.stage.op(inputs, s, z)
+                    t1 = time.perf_counter()
+                    with cond:
+                        self._record(js, sr, task, value, t0 - t0_run,
+                                     t1 - t0_run, wid, stolen, boosted,
+                                     arbiter, events, busy, ntasks,
+                                     job_tasks, job_end, steals)
+                        job_left[js.job.name] -= 1
+                        total_left[0] -= 1
+                        if job_left[js.job.name] == 0:
+                            js.done = True
+                            js.finish = job_end[js.job.name]
+                        cond.notify_all()
+                except BaseException as e:  # surfaced to the caller below
+                    with cond:
+                        errors.append(e)
+                        cond.notify_all()
+                    return
+
+        threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+                   for w in range(n_workers)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errors:
+            raise errors[0]
+        wall = time.perf_counter() - t0_run
+
+        results: dict[str, JobResult] = {}
+        tenant_service: dict[str, float] = {}
+        for js in states:
+            jname = js.job.name
+            values = {n: sr.value for n, sr in runs[jname].items()}
+            finish = js.finish if js.finish is not None else wall
+            latency = finish - js.arrival
+            met = (None if js.job.deadline_s is None
+                   else latency <= js.job.deadline_s)
+            results[jname] = JobResult(
+                name=jname, values=values, arrival_s=js.arrival,
+                finish_s=finish, latency_s=latency, service_s=js.service,
+                n_tasks=job_tasks[jname], deadline_met=met)
+            tenant_service[js.job.tenant] = (
+                tenant_service.get(js.job.tenant, 0.0) + js.service)
+        arrivals = [js.arrival for js in states]
+        finishes = [r.finish_s for r in results.values()]
+        return ServerResult(
+            jobs=results, events=events, wall_time_s=wall,
+            makespan_s=(max(finishes) - min(arrivals)) if states else 0.0,
+            per_worker_busy_s=busy, per_worker_tasks=ntasks,
+            steals=steals[0], tenant_service_s=tenant_service)
+
+    @staticmethod
+    def _record(js, sr, task, value, rel0, rel1, wid, stolen, boosted,
+                arbiter, events, busy, ntasks, job_tasks, job_end, steals):
+        """Fold one chunk into stage/job/arbiter accounting (lock held)."""
+        i, s, z = task
+        dt = rel1 - rel0
+        sr.record(task, value, dt, rel0, rel1)
+        arbiter.charge(js, dt, rel1)
+        events.append(ServerTaskEvent(
+            js.job.name, js.job.tenant, sr.stage.name, i, s, z, wid,
+            rel0, rel1, stolen, boosted))
+        busy[wid] += dt
+        ntasks[wid] += 1
+        job_tasks[js.job.name] += 1
+        job_end[js.job.name] = max(job_end[js.job.name], rel1)
+        steals[0] += int(stolen)

@@ -35,11 +35,14 @@ import numpy as np
 from .partitioners import chunk_schedule, make_partitioner
 from .victim import make_victim_selector
 
-__all__ = ["SimOverheads", "SimResult", "simulate", "DagSimResult", "simulate_dag"]
+__all__ = ["SimOverheads", "SimResult", "simulate", "DagSimResult",
+           "simulate_dag", "ServerSimResult", "simulate_server"]
 
 
 @dataclass(frozen=True)
 class SimOverheads:
+    """Calibrated queue/locality overheads of the discrete-event model (§3)."""
+
     h_access: float = 5e-6     # centralized / shared queue access (lock hold)
     h_local: float = 1e-6      # own-queue access
     h_probe: float = 2e-6      # victim probe
@@ -49,6 +52,8 @@ class SimOverheads:
 
 @dataclass
 class SimResult:
+    """Virtual-time outcome of one flat-batch simulation."""
+
     makespan: float
     per_worker_busy: list[float]
     per_worker_finish: list[float]
@@ -57,6 +62,7 @@ class SimResult:
 
     @property
     def load_imbalance(self) -> float:
+        """(max - mean) / max of per-worker finish times (0 = balanced)."""
         mx = max(self.per_worker_finish)
         mean = sum(self.per_worker_finish) / len(self.per_worker_finish)
         return (mx - mean) / mx if mx else 0.0
@@ -233,6 +239,8 @@ def simulate(
 
 @dataclass
 class DagSimResult:
+    """Virtual-time outcome of one simulate_dag replay."""
+
     makespan: float
     per_worker_busy: list[float]
     stage_start: dict[str, float]
@@ -240,6 +248,7 @@ class DagSimResult:
     queue_wait: float = 0.0
 
     def overlap_s(self, a: str, b: str) -> float:
+        """Virtual seconds during which stages ``a`` and ``b`` were both active."""
         return max(0.0, min(self.stage_finish[a], self.stage_finish[b])
                    - max(self.stage_start[a], self.stage_start[b]))
 
@@ -248,7 +257,7 @@ class _SimStage:
     """Virtual-time state of one DAG stage."""
 
     __slots__ = ("name", "deps", "chunks", "chunk_cost", "ptr", "row_time",
-                 "layout", "queue", "start", "finish", "last_end")
+                 "layout", "queue", "start", "finish", "max_end", "last_end")
 
     def __init__(self, name, deps, schedule, costs, layout):
         self.name = name
@@ -261,6 +270,7 @@ class _SimStage:
         self.queue = _SimQueue()
         self.start = math.inf
         self.finish = math.inf
+        self.max_end = 0.0                    # latest chunk completion so far
         self.last_end: dict[int, int] = {}    # per-worker locality tracking
 
 
@@ -268,6 +278,34 @@ def _combo_of(cfg) -> tuple[str, str, str]:
     if isinstance(cfg, tuple):
         return cfg
     return (cfg.technique, cfg.queue_layout, cfg.victim_strategy)
+
+
+def _pop_chunk(st: _SimStage, w: int, t: float, ov: SimOverheads):
+    """Advance ``st``'s FIFO head for worker ``w`` at virtual time ``t``:
+    serialize the queue access, apply the locality penalty, and fill the
+    row/stage completion state. Shared by simulate_dag and simulate_server
+    so their pop models can't drift apart. Returns
+    (task_id, start, size, cost, t_acc, t_end, queue_wait). Stage finish
+    is the max chunk end, not the last pop's end — an earlier-popped chunk
+    can outlive the final pop.
+    """
+    s, z = st.chunks[st.ptr]
+    cost = st.chunk_cost[st.ptr]
+    tid = st.ptr
+    st.ptr += 1
+    hold = ov.h_access if st.layout == "CENTRALIZED" else ov.h_local
+    t_acc = st.queue.access(t, hold)
+    wait = max(0.0, (t_acc - hold) - t)
+    if st.last_end.get(w) is not None and st.last_end[w] != s:
+        cost *= 1.0 + ov.locality_penalty
+    st.last_end[w] = s + z
+    t_end = t_acc + cost
+    st.row_time[s:s + z] = t_end
+    st.start = min(st.start, t)
+    st.max_end = max(st.max_end, t_end)
+    if st.ptr == len(st.chunks):
+        st.finish = st.max_end
+    return tid, s, z, cost, t_acc, t_end, wait
 
 
 def simulate_dag(
@@ -370,20 +408,8 @@ def simulate_dag(
             continue
         idx, st = taken
         cursor[w] = (idx + 1) % nstages
-        s, z = st.chunks[st.ptr]
-        cost = st.chunk_cost[st.ptr]
-        st.ptr += 1
-        hold = ov.h_access if st.layout == "CENTRALIZED" else ov.h_local
-        t_acc = st.queue.access(t, hold)
-        queue_wait += max(0.0, (t_acc - hold) - t)
-        if st.last_end.get(w) is not None and st.last_end[w] != s:
-            cost *= 1.0 + ov.locality_penalty
-        st.last_end[w] = s + z
-        t_end = t_acc + cost
-        st.row_time[s:s + z] = t_end
-        st.start = min(st.start, t)
-        if st.ptr == len(st.chunks):
-            st.finish = t_end
+        _, _, _, cost, _, t_end, wait = _pop_chunk(st, w, t, ov)
+        queue_wait += wait
         busy[w] += cost
         last_completion = max(last_completion, t_end)
         remaining -= 1
@@ -402,3 +428,183 @@ def simulate_dag(
         stage_finish={n: (0.0 if math.isinf(stages[n].finish) else stages[n].finish)
                       for n in names},
         queue_wait=queue_wait)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant serving simulation (inter-job arbiter policy search, §10)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServerSimResult:
+    """Virtual-time outcome of one simulate_server replay."""
+
+    makespan: float                      # last job finish minus first arrival
+    job_finish: dict[str, float]
+    job_latency: dict[str, float]        # finish minus arrival, per job
+    tenant_service: dict[str, float]
+    per_worker_busy: list[float]
+    events: list
+    queue_wait: float = 0.0
+
+    def latencies(self) -> dict[str, float]:
+        """Job name -> latency in virtual seconds."""
+        return dict(self.job_latency)
+
+    def latency_percentile(self, q: float) -> float:
+        """Percentile ``q`` (0-100) over per-job latencies."""
+        return float(np.percentile(list(self.job_latency.values()), q))
+
+
+def simulate_server(
+    jobs,
+    n_workers: int = 20,
+    arbiter="fair",
+    arbiter_kwargs: dict | None = None,
+    overheads: SimOverheads = SimOverheads(),
+    seed: int = 0,
+) -> ServerSimResult:
+    """Replay mixed Job arrivals through the serving runtime in virtual time.
+
+    Mirrors core/server.py's PipelineServer policy exactly — the same
+    Arbiter classes rank JobState records, intra-job scheduling follows
+    each stage's (technique, layout) with FIFO-head dependency gating and
+    rotating stage cursors (as in simulate_dag) — but against per-row cost
+    vectors (``Job.stage_costs``, else ``Stage.cost_of_range``, else unit)
+    instead of wall clocks, so arbiter policies and per-job configs can be
+    searched in milliseconds. ``jobs`` are core.server.Job records;
+    ``arbiter`` is a name in core.server.ARBITERS or an Arbiter instance
+    (instances carry accounting state — pass a name to get a fresh one).
+    """
+    from .server import JobState, ServerTaskEvent, job_stage_costs, make_arbiter
+
+    names = [j.name for j in jobs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate job names in {names}")
+    arb = make_arbiter(arbiter, **(arbiter_kwargs or {}))
+    states = [JobState(job=j, seq=i, arrival=float(j.arrival_s))
+              for i, j in enumerate(jobs)]
+    ov = overheads
+
+    stages: dict[str, list[_SimStage]] = {}     # job -> topo-ordered stages
+    by_name: dict[str, dict[str, _SimStage]] = {}
+    job_left: dict[str, int] = {}
+    for j in jobs:
+        costs = job_stage_costs(j)
+        per = dict(j.per_stage or {})
+        jl = []
+        for n in j.dag.stage_names:
+            stage = j.dag.stages[n]
+            combo = _combo_of(per.get(n) or stage.config
+                              or ("STATIC", "CENTRALIZED", "SEQ"))
+            tech, layout, _ = combo
+            schedule = chunk_schedule(tech, stage.n_rows, n_workers, seed=seed)
+            jl.append(_SimStage(n, [(d.producer, d.kind) for d in stage.deps],
+                                schedule, costs[n], layout.upper()))
+        stages[j.name] = jl
+        by_name[j.name] = {st.name: st for st in jl}
+        job_left[j.name] = sum(len(st.chunks) for st in jl)
+        for st in jl:
+            if not st.chunks:
+                st.start = st.finish = 0.0
+
+    job_end = {j.name: 0.0 for j in jobs}
+    for js in states:
+        if job_left[js.job.name] == 0:
+            js.done, js.finish = True, js.arrival
+            job_end[js.job.name] = js.arrival
+
+    def head_ready(jname: str, st: _SimStage) -> float:
+        """Virtual time at which this stage's FIFO-head chunk is runnable."""
+        s, z = st.chunks[st.ptr]
+        rt = 0.0
+        for prod, kind in st.deps:
+            p = by_name[jname][prod]
+            if kind == "full":
+                rt = max(rt, p.finish)
+            else:
+                seg = p.row_time[s:s + z]
+                rt = max(rt, float(seg.max()) if len(seg) else 0.0)
+        return rt
+
+    heap: list[tuple[float, int]] = [(0.0, w) for w in range(n_workers)]
+    heapq.heapify(heap)
+    pending: list[int] = []
+    cursors: dict[tuple[int, int], int] = {}
+    busy = [0.0] * n_workers
+    events: list = []
+    queue_wait = 0.0
+    remaining = sum(job_left.values())
+
+    while remaining > 0:
+        if not heap:
+            raise RuntimeError("simulate_server: no runnable chunk but work "
+                               "remains (unsatisfiable dependency)")
+        t, w = heapq.heappop(heap)
+        admitted = [js for js in states if js.arrival <= t and not js.done]
+        taken = None
+        for js in arb.order(admitted, t):
+            jl = stages[js.job.name]
+            ns = len(jl)
+            cur = cursors.get((w, js.seq), w % ns)
+            for k in range(ns):
+                idx = (cur + k) % ns
+                st = jl[idx]
+                if st.ptr >= len(st.chunks):
+                    continue
+                if head_ready(js.job.name, st) <= t:
+                    taken = (js, idx, st)
+                    break
+            if taken is not None:
+                break
+        if taken is None:
+            # wake at the next event that can change runnability: an
+            # arrival, or an in-flight chunk completion gating some head
+            wakes = [js.arrival for js in states if js.arrival > t]
+            for js in states:
+                if js.done or js.arrival > t:
+                    continue
+                for st in stages[js.job.name]:
+                    if st.ptr < len(st.chunks):
+                        hr = head_ready(js.job.name, st)
+                        if math.isfinite(hr) and hr > t:
+                            wakes.append(hr)
+            if wakes:
+                heapq.heappush(heap, (min(wakes), w))
+            else:
+                pending.append(w)
+            continue
+        js, idx, st = taken
+        jname = js.job.name
+        cursors[(w, js.seq)] = (idx + 1) % len(stages[jname])
+        tid, s, z, cost, t_acc, t_end, wait = _pop_chunk(st, w, t, ov)
+        queue_wait += wait
+        arb.charge(js, cost, t_end)
+        events.append(ServerTaskEvent(
+            jname, js.job.tenant, st.name, tid, s, z, w, t_acc, t_end,
+            False, js.boosted))
+        busy[w] += cost
+        job_left[jname] -= 1
+        remaining -= 1
+        job_end[jname] = max(job_end[jname], t_end)
+        if job_left[jname] == 0:
+            js.done = True
+            js.finish = job_end[jname]
+        heapq.heappush(heap, (t_end, w))
+        if pending:
+            for pw in pending:
+                heapq.heappush(heap, (t, pw))
+            pending.clear()
+
+    tenant_service: dict[str, float] = {}
+    for js in states:
+        tenant_service[js.job.tenant] = (
+            tenant_service.get(js.job.tenant, 0.0) + js.service)
+    finishes = {js.job.name: float(js.finish) for js in states}
+    arrivals = [js.arrival for js in states]
+    return ServerSimResult(
+        makespan=(max(finishes.values()) - min(arrivals)) if states else 0.0,
+        job_finish=finishes,
+        job_latency={n: finishes[n] - a for n, a in
+                     zip([js.job.name for js in states], arrivals)},
+        tenant_service=tenant_service, per_worker_busy=busy,
+        events=events, queue_wait=queue_wait)

@@ -29,6 +29,7 @@ class RangeTask:
     cost_hint: float = field(compare=False, default=0.0)
 
     def run(self) -> Any:
+        """Execute the operator on this task's row range."""
         return self.op(self.start, self.size)
 
 

@@ -18,6 +18,8 @@ __all__ = ["VictimSelector", "make_victim_selector", "VICTIM_STRATEGIES"]
 
 
 class VictimSelector:
+    """Victim-ordering base: yields queue ids for a thief to probe (paper C.2)."""
+
     def __init__(self, n_workers: int, numa_domains: list[int] | None = None, seed: int = 0):
         self.n_workers = n_workers
         self.domains = list(numa_domains) if numa_domains is not None else [0] * n_workers
@@ -37,6 +39,7 @@ class SeqVictim(VictimSelector):
     """SEQ: round-robin starting after the thief's position."""
 
     def candidates(self, thief: int) -> list[int]:
+        """Every other queue in round-robin order after the thief."""
         return [(thief + i) % self.n_workers for i in range(1, self.n_workers)]
 
 
@@ -44,6 +47,7 @@ class SeqPriVictim(VictimSelector):
     """SEQPRI: SEQ order, same-NUMA-domain victims first."""
 
     def candidates(self, thief: int) -> list[int]:
+        """SEQ order, stably partitioned into same-domain then remote."""
         seq = [(thief + i) % self.n_workers for i in range(1, self.n_workers)]
         dom = self.domains[thief]
         return [w for w in seq if self.domains[w] == dom] + [
@@ -55,6 +59,7 @@ class RndVictim(VictimSelector):
     """RND: uniform random permutation of all other workers."""
 
     def candidates(self, thief: int) -> list[int]:
+        """A fresh random permutation of every other queue."""
         others = self._others(thief)
         self._rng.shuffle(others)
         return others
@@ -64,6 +69,7 @@ class RndPriVictim(VictimSelector):
     """RNDPRI: random within the thief's NUMA domain first, then outside."""
 
     def candidates(self, thief: int) -> list[int]:
+        """Shuffled same-domain queues, then shuffled remote ones."""
         dom = self.domains[thief]
         local = [w for w in self._others(thief) if self.domains[w] == dom]
         remote = [w for w in self._others(thief) if self.domains[w] != dom]
@@ -83,6 +89,7 @@ VICTIM_STRATEGIES = {
 def make_victim_selector(
     name: str, n_workers: int, numa_domains: list[int] | None = None, seed: int = 0
 ) -> VictimSelector:
+    """Build a VictimSelector by name from VICTIM_STRATEGIES (DESIGN.md §2)."""
     try:
         cls = VICTIM_STRATEGIES[name.upper()]
     except KeyError:

@@ -7,6 +7,8 @@ from .apps import (
     connected_components_dag,
     linear_regression,
     linear_regression_dag,
+    linreg_dag,
+    recommendation_dag,
     recommendation_oracle,
     recommendation_pipeline,
 )
@@ -16,6 +18,7 @@ from .sparse import CSRMatrix, rmat_graph, replicated_graph
 __all__ = [
     "VEE", "PipelineResult", "CSRMatrix", "rmat_graph", "replicated_graph",
     "connected_components", "linear_regression", "cc_step_numpy",
-    "cc_iteration_dag", "connected_components_dag", "linear_regression_dag",
+    "cc_iteration_dag", "connected_components_dag", "linreg_dag",
+    "linear_regression_dag", "recommendation_dag",
     "recommendation_pipeline", "recommendation_oracle",
 ]

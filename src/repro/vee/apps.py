@@ -38,7 +38,8 @@ from .sparse import CSRMatrix
 
 __all__ = [
     "cc_step_numpy", "connected_components", "linear_regression",
-    "cc_iteration_dag", "connected_components_dag", "linear_regression_dag",
+    "cc_iteration_dag", "connected_components_dag", "linreg_dag",
+    "linear_regression_dag", "recommendation_dag",
     "recommendation_pipeline", "recommendation_oracle",
 ]
 
@@ -191,20 +192,20 @@ def connected_components_dag(
     return c, max_iter, history
 
 
-def linear_regression_dag(
+def linreg_dag(
     num_rows: int,
     num_cols: int,
-    config: SchedulerConfig,
     lam: float = 0.001,
     seed: int = 1,
-    per_stage: dict | None = None,
-) -> tuple[np.ndarray, DagResult]:
-    """Paper Listing 2 as a DAG: moments -> standardized syrk/gemv -> solve.
+):
+    """Paper Listing 2 as a composable DAG (no execution).
 
-    Stage ``moments`` partial-sums column sums and squared sums (for the
-    mean/std standardization); ``syrk_gemv`` depends on it in full and
-    accumulates X1^T X1 and X1^T y over row blocks. The tiny solve happens
-    on the host after the DAG.
+    Returns ``(dag, finalize)``: stage ``moments`` partial-sums column
+    sums and squared sums (for mean/std standardization); ``syrk_gemv``
+    depends on it in full and accumulates X1^T X1 and X1^T y over row
+    blocks. ``finalize(values)`` performs the tiny host-side solve and
+    returns beta. Used directly by linear_regression_dag and as a serving
+    Job payload (core/server.py).
     """
     rng = np.random.default_rng(seed)
     XY = rng.uniform(0.0, 1.0, size=(num_rows, num_cols))
@@ -229,28 +230,46 @@ def linear_regression_dag(
         Stage("syrk_gemv", num_rows, syrk_gemv_op, combine="sum",
               deps=(StageDep("moments", DEP_FULL),)),
     ])
+
+    def finalize(values: dict) -> np.ndarray:
+        Ab = values["syrk_gemv"]
+        A, b = Ab[:, :-1], Ab[:, -1:]
+        A = A + np.eye(A.shape[0]) * lam
+        return np.linalg.solve(A, b)
+
+    return dag, finalize
+
+
+def linear_regression_dag(
+    num_rows: int,
+    num_cols: int,
+    config: SchedulerConfig,
+    lam: float = 0.001,
+    seed: int = 1,
+    per_stage: dict | None = None,
+) -> tuple[np.ndarray, DagResult]:
+    """Paper Listing 2 as a DAG: moments -> standardized syrk/gemv -> solve.
+
+    The DAG comes from ``linreg_dag``; the tiny solve happens on the host
+    after the run. Returns (beta, DagResult).
+    """
+    dag, finalize = linreg_dag(num_rows, num_cols, lam=lam, seed=seed)
     res = PipelineExecutor(dag, config, per_stage).run()
-    Ab = res.values["syrk_gemv"]
-    A, b = Ab[:, :-1], Ab[:, -1:]
-    A = A + np.eye(A.shape[0]) * lam
-    beta = np.linalg.solve(A, b)
-    return beta, res
+    return finalize(res.values), res
 
 
-def recommendation_pipeline(
+def recommendation_dag(
     n_users: int,
     n_items: int,
-    config: SchedulerConfig,
-    per_stage: dict | None = None,
     density: float = 0.3,
     seed: int = 0,
-) -> tuple[np.ndarray, DagResult]:
-    """A small DM+ML recommendation DAG with two independent branches.
+) -> PipelineDAG:
+    """The two-branch recommendation DAG (no execution).
 
     ``item_norms`` (reduction over the ratings matrix) and ``user_bias``
-    (per-user mean) have no edge between them, so they overlap on the
+    (per-user mean) have no edge between them, so they overlap on a
     shared pool; ``scores`` consumes item_norms in full and user_bias
-    elementwise and emits each user's top item. Returns (top_items, result).
+    elementwise and emits each user's top item.
     """
     rng = np.random.default_rng(seed)
     R = rng.uniform(0.0, 1.0, size=(n_users, n_items))
@@ -272,7 +291,23 @@ def recommendation_pipeline(
         "scores", n_users, scores_op, combine="concat",
         deps=(StageDep("item_norms", DEP_FULL),
               StageDep("user_bias", DEP_ELEMENTWISE)))
-    dag = PipelineDAG([item_norms, user_bias, scores])
+    return PipelineDAG([item_norms, user_bias, scores])
+
+
+def recommendation_pipeline(
+    n_users: int,
+    n_items: int,
+    config: SchedulerConfig,
+    per_stage: dict | None = None,
+    density: float = 0.3,
+    seed: int = 0,
+) -> tuple[np.ndarray, DagResult]:
+    """Run the recommendation DAG on one PipelineExecutor pool.
+
+    See ``recommendation_dag`` for the stage graph (the two independent
+    branches overlap on the shared pool). Returns (top_items, result).
+    """
+    dag = recommendation_dag(n_users, n_items, density=density, seed=seed)
     res = PipelineExecutor(dag, config, per_stage).run()
     return res.values["scores"], res
 

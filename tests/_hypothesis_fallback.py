@@ -7,7 +7,8 @@ derived from the test's qualified name and arguments, so runs are
 reproducible and property tests stay meaningful offline.
 
 Supported API: ``given`` (keyword strategies), ``settings(max_examples=...,
-deadline=...)``, ``strategies.integers`` and ``strategies.sampled_from``.
+deadline=...)``, ``strategies.integers``, ``strategies.sampled_from``,
+``strategies.booleans``, and ``strategies.lists``.
 """
 
 from __future__ import annotations
@@ -45,10 +46,18 @@ def _booleans() -> _Strategy:
     return _Strategy(lambda rng: bool(rng.getrandbits(1)))
 
 
+def _lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng: random.Random):
+        size = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(size)]
+    return _Strategy(draw)
+
+
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.sampled_from = _sampled_from
 strategies.booleans = _booleans
+strategies.lists = _lists
 
 
 def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):

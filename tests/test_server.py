@@ -1,0 +1,376 @@
+"""Multi-tenant serving runtime tests (core/server.py, DESIGN.md §10).
+
+The arbiter invariants, property-tested on the virtual-time event
+timeline (simulate_server pops sequentially, so event order IS decision
+order) and on the real threaded pool:
+
+  * every admitted job completes exactly once — each stage's executed
+    chunks are an exact partition of its rows, and each job records one
+    finish no earlier than its arrival;
+  * strict priority never pops a lower-priority chunk while a runnable
+    higher-priority chunk exists, except pops flagged ``boosted`` by the
+    starvation guard;
+  * weighted-fair sharing keeps the normalized-service gap between two
+    continuously-backlogged tenants bounded by the largest chunk cost
+    times (1/w_i + 1/w_j) at every decision point.
+
+Plus: FIFO head-of-line vs fair-share p99 on the mixed heterogeneous
+workload (the benchmark gate), contention-aware per-job selection
+(tuned <= contention-blind baseline), deadlines, and late arrivals.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Job,
+    PipelineDAG,
+    PipelineServer,
+    SchedulerConfig,
+    Stage,
+    StageDep,
+    make_arbiter,
+    select_offline_server,
+    simulate_server,
+)
+
+ARBS = ["fifo", "priority", "fair"]
+TECHS = ["STATIC", "SS", "MFSC", "GSS", "TSS"]
+
+
+def _chain_dag(n, kind="elementwise"):
+    a = Stage("a", n, lambda inputs, s, z: np.arange(s, s + z, dtype=np.int64),
+              combine="concat")
+    b = Stage("b", n, lambda inputs, s, z: int(inputs["a"][s:s + z].sum()),
+              combine="sum", deps=(StageDep("a", kind),))
+    return PipelineDAG([a, b])
+
+
+def _sim_job(name, n, scale, arrival=0.0, tenant="default", weight=1.0,
+             priority=0, seed=0, skew=True, tail=True):
+    """A cost-only job: skewed stage -> streamed check (+ serial-tail reduce)."""
+    rng = np.random.default_rng(seed)
+    stages = [
+        Stage("prop", n, lambda i, s, z: None),
+        Stage("check", n, lambda i, s, z: None, combine="sum",
+              deps=(StageDep("prop", "elementwise"),)),
+    ]
+    costs = {
+        "prop": (rng.pareto(1.2, n) * scale + scale * 0.1) if skew
+        else np.full(n, scale),
+        "check": np.full(n, scale * 0.01),
+    }
+    if tail:
+        m = max(8, n // 64)
+        stages.append(Stage("reduce", m, lambda i, s, z: None, combine="sum",
+                            deps=(StageDep("prop", "full"),)))
+        costs["reduce"] = np.full(m, scale * 2.0)
+    return Job(name, PipelineDAG(stages), tenant=tenant, weight=weight,
+               priority=priority, arrival_s=arrival, stage_costs=costs)
+
+
+def _mixed_workload():
+    """One heavy batch job + two light interactive jobs (the bench shape)."""
+    return [
+        _sim_job("batch", 4000, 1e-5, 0.0, "analytics", weight=1.0, seed=0),
+        _sim_job("inter1", 400, 1e-5, 0.002, "interactive", weight=4.0, seed=1),
+        _sim_job("inter2", 400, 1e-5, 0.004, "interactive", weight=4.0, seed=2),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_bad_weight_rejected():
+    with pytest.raises(ValueError, match="weight"):
+        Job("j", _chain_dag(4), weight=0.0)
+
+
+def test_duplicate_job_names_rejected():
+    jobs = [Job("same", _chain_dag(4)), Job("same", _chain_dag(8))]
+    with pytest.raises(ValueError, match="duplicate"):
+        simulate_server(jobs, n_workers=2)
+    with pytest.raises(ValueError, match="duplicate"):
+        PipelineServer(SchedulerConfig(n_workers=2)).serve(jobs)
+
+
+def test_unknown_arbiter_rejected():
+    with pytest.raises(ValueError, match="unknown arbiter"):
+        make_arbiter("lottery")
+
+
+# ---------------------------------------------------------------------------
+# exactly-once completion (property, virtual time)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 300), min_size=1, max_size=4),
+    p=st.integers(1, 8),
+    arb=st.sampled_from(ARBS),
+    tech=st.sampled_from(TECHS),
+    seed=st.integers(0, 3),
+)
+def test_sim_every_job_completes_exactly_once(sizes, p, arb, tech, seed):
+    jobs = [
+        Job(f"j{i}", _chain_dag(n), tenant=f"t{i % 2}", weight=1.0 + i,
+            priority=i % 3, arrival_s=0.0005 * i,
+            per_stage={"a": (tech, "CENTRALIZED", "SEQ")})
+        for i, n in enumerate(sizes)
+    ]
+    res = simulate_server(jobs, n_workers=p, arbiter=arb, seed=seed)
+    assert set(res.job_finish) == {j.name for j in jobs}
+    for i, (j, n) in enumerate(zip(jobs, sizes)):
+        # each stage's chunks form an exact partition of [0, n)
+        for stage in ("a", "b"):
+            ranges = sorted((e.start, e.size) for e in res.events
+                            if e.job == j.name and e.stage == stage)
+            covered = 0
+            for s, z in ranges:
+                assert s == covered, f"gap/overlap at {s} in {j.name}/{stage}"
+                covered += z
+            assert covered == n
+        # one finish, not before arrival, and no event precedes arrival
+        assert res.job_finish[j.name] >= j.arrival_s
+        assert res.job_latency[j.name] >= 0.0
+        first = min((e.t_start for e in res.events if e.job == j.name),
+                    default=j.arrival_s)
+        assert first >= j.arrival_s
+
+
+# ---------------------------------------------------------------------------
+# exactly-once + correct values (property, real threaded pool)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 120), min_size=1, max_size=3),
+    p=st.integers(1, 4),
+    arb=st.sampled_from(ARBS),
+    kind=st.sampled_from(["full", "elementwise"]),
+)
+def test_server_every_job_completes_exactly_once(sizes, p, arb, kind):
+    jobs = [
+        Job(f"j{i}", _chain_dag(n, kind), tenant=f"t{i % 2}",
+            weight=float(1 + i), priority=i)
+        for i, n in enumerate(sizes)
+    ]
+    srv = PipelineServer(SchedulerConfig(technique="GSS", n_workers=p),
+                        arbiter=arb)
+    res = srv.serve(jobs)
+    assert set(res.jobs) == {j.name for j in jobs}
+    for j, n in zip(jobs, sizes):
+        r = res.jobs[j.name]
+        assert np.array_equal(r.values["a"], np.arange(n, dtype=np.int64))
+        assert int(r.values["b"]) == int(np.arange(n).sum())
+        assert r.latency_s >= 0.0
+        assert r.n_tasks == sum(1 for e in res.events if e.job == j.name)
+        for stage in ("a", "b"):
+            ranges = sorted((e.start, e.size) for e in res.events
+                            if e.job == j.name and e.stage == stage)
+            covered = 0
+            for s, z in ranges:
+                assert s == covered
+                covered += z
+            assert covered == n
+    assert sum(res.per_worker_tasks) == len(res.events)
+
+
+# ---------------------------------------------------------------------------
+# strict-priority invariant (event order IS decision order in the sim)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    p=st.integers(1, 6),
+    tech=st.sampled_from(TECHS),
+    seed=st.integers(0, 5),
+)
+def test_priority_never_inverts_without_guard(p, tech, seed):
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for i, prio in enumerate((3, 1, 2)):
+        n = int(rng.integers(50, 250))
+        jobs.append(Job(
+            f"j{i}", PipelineDAG([Stage("s", n, lambda i_, s, z: None)]),
+            priority=prio,
+            per_stage={"s": (tech, "CENTRALIZED", "SEQ")},
+            stage_costs={"s": rng.uniform(1e-6, 1e-4, n)}))
+    res = simulate_server(jobs, n_workers=p, arbiter="priority", seed=seed)
+    prio_of = {j.name: j.priority for j in jobs}
+    # all jobs arrive at t=0 and are single-stage, so a job with unpopped
+    # chunks is always runnable: every pop of a lower-priority job must
+    # come after ALL pops of every higher-priority job
+    last_pos = {}
+    for pos, e in enumerate(res.events):
+        last_pos[e.job] = pos
+    for pos, e in enumerate(res.events):
+        assert not e.boosted  # no starvation guard configured
+        for other, lp in last_pos.items():
+            if prio_of[other] > prio_of[e.job]:
+                assert lp < pos, (
+                    f"{e.job} (prio {prio_of[e.job]}) popped at {pos} while "
+                    f"{other} (prio {prio_of[other]}) still had chunks")
+
+
+def test_priority_starvation_guard_boosts_low_job():
+    n_hi, n_lo = 400, 6
+    hi = Job("hi", PipelineDAG([Stage("s", n_hi, lambda i, s, z: None)]),
+             priority=10, per_stage={"s": ("SS", "CENTRALIZED", "SEQ")},
+             stage_costs={"s": np.full(n_hi, 1e-3)})
+    lo = Job("lo", PipelineDAG([Stage("s", n_lo, lambda i, s, z: None)]),
+             priority=0, per_stage={"s": ("SS", "CENTRALIZED", "SEQ")},
+             stage_costs={"s": np.full(n_lo, 1e-3)})
+
+    # without a guard the low job waits for the whole high stream
+    res = simulate_server([hi, lo], n_workers=2, arbiter="priority")
+    first_lo = min(i for i, e in enumerate(res.events) if e.job == "lo")
+    last_hi = max(i for i, e in enumerate(res.events) if e.job == "hi")
+    assert first_lo > last_hi
+
+    # with the guard, the starving low job trickles through early, flagged
+    res = simulate_server([hi, lo], n_workers=2, arbiter="priority",
+                          arbiter_kwargs={"starve_after_s": 0.01})
+    lo_events = [(i, e) for i, e in enumerate(res.events) if e.job == "lo"]
+    assert any(e.boosted for _, e in lo_events)
+    assert min(i for i, _ in lo_events) < last_hi
+    assert res.job_latency["lo"] < res.job_latency["hi"]
+
+
+# ---------------------------------------------------------------------------
+# weighted-fair share error bound
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(
+    p=st.integers(1, 6),
+    w_a=st.integers(1, 4),
+    w_b=st.integers(1, 4),
+    seed=st.integers(0, 4),
+)
+def test_fair_share_gap_bounded_while_backlogged(p, w_a, w_b, seed):
+    rng = np.random.default_rng(seed)
+    n = 600
+    jobs = [
+        Job("ja", PipelineDAG([Stage("s", n, lambda i, s, z: None)]),
+            tenant="A", weight=float(w_a),
+            per_stage={"s": ("GSS", "CENTRALIZED", "SEQ")},
+            stage_costs={"s": rng.uniform(1e-6, 5e-5, n)}),
+        Job("jb", PipelineDAG([Stage("s", n, lambda i, s, z: None)]),
+            tenant="B", weight=float(w_b),
+            per_stage={"s": ("GSS", "CENTRALIZED", "SEQ")},
+            stage_costs={"s": rng.uniform(1e-6, 5e-5, n)}),
+    ]
+    res = simulate_server(jobs, n_workers=p, arbiter="fair", seed=seed)
+    costs = [e.t_end - e.t_start for e in res.events]
+    c_max = max(costs)
+    bound = 2.0 * c_max * (1.0 / w_a + 1.0 / w_b) + 1e-12
+    totals = {"ja": sum(1 for e in res.events if e.job == "ja"),
+              "jb": sum(1 for e in res.events if e.job == "jb")}
+    seen = {"ja": 0, "jb": 0}
+    v = {"A": 0.0, "B": 0.0}
+    for e in res.events:
+        seen[e.job] += 1
+        v[e.tenant] += (e.t_end - e.t_start) / (w_a if e.tenant == "A" else w_b)
+        if seen["ja"] < totals["ja"] and seen["jb"] < totals["jb"]:
+            assert abs(v["A"] - v["B"]) <= bound, (
+                f"normalized service gap {abs(v['A'] - v['B']):.3e} exceeds "
+                f"bound {bound:.3e} while both tenants backlogged")
+
+
+# ---------------------------------------------------------------------------
+# policy comparison on the mixed workload (the benchmark gate)
+# ---------------------------------------------------------------------------
+
+def test_fair_p99_not_worse_than_fifo_on_mixed_load():
+    jobs = _mixed_workload()
+    fifo = simulate_server(jobs, n_workers=20, arbiter="fifo")
+    fair = simulate_server(jobs, n_workers=20, arbiter="fair")
+    assert fair.latency_percentile(99) <= fifo.latency_percentile(99) * (1 + 1e-9)
+    # head-of-line FIFO idles workers at stage barriers; fair backfills
+    assert fair.makespan <= fifo.makespan * (1 + 1e-9)
+
+
+def test_fifo_serves_head_job_only():
+    jobs = [_sim_job("first", 500, 1e-5, 0.0, seed=3, tail=False),
+            _sim_job("second", 500, 1e-5, 0.0005, seed=4, tail=False)]
+    res = simulate_server(jobs, n_workers=4, arbiter="fifo")
+    # head-of-line: no chunk of the second job is popped while the head job
+    # still has unpopped chunks (event order is decision order in the sim)
+    last_first = max(i for i, e in enumerate(res.events) if e.job == "first")
+    first_second = min(i for i, e in enumerate(res.events) if e.job == "second")
+    assert first_second > last_first
+
+
+# ---------------------------------------------------------------------------
+# contention-aware per-job selection
+# ---------------------------------------------------------------------------
+
+def test_select_offline_server_not_worse_than_isolated():
+    jobs = [_sim_job("a", 300, 1e-5, 0.0, "t1", seed=5, tail=False),
+            _sim_job("b", 300, 1e-5, 0.001, "t2", seed=6, skew=False,
+                     tail=False)]
+    assign, tuned, baseline = select_offline_server(
+        jobs, n_workers=8, arbiter="fair", objective="p99", passes=1)
+    assert tuned <= baseline * (1 + 1e-12)
+    for j in jobs:
+        assert set(assign[j.name]) == set(j.dag.stage_names)
+        for combo in assign[j.name].values():
+            assert len(combo) == 3
+
+
+def test_select_offline_server_objectives():
+    jobs = [_sim_job("a", 120, 1e-5, 0.0, seed=7, tail=False)]
+    for objective in ("p50", "mean", "makespan"):
+        _, tuned, baseline = select_offline_server(
+            jobs, n_workers=4, objective=objective, passes=1)
+        assert tuned <= baseline * (1 + 1e-12)
+    with pytest.raises(ValueError, match="objective"):
+        select_offline_server(jobs, n_workers=4, objective="p17th")
+
+
+# ---------------------------------------------------------------------------
+# deadlines and arrivals (real threaded pool)
+# ---------------------------------------------------------------------------
+
+def test_server_deadline_accounting():
+    jobs = [Job("fast", _chain_dag(16), deadline_s=30.0),
+            Job("doomed", _chain_dag(16), deadline_s=1e-9),
+            Job("nodl", _chain_dag(16))]
+    res = PipelineServer(SchedulerConfig(n_workers=2)).serve(jobs)
+    assert res.jobs["fast"].deadline_met is True
+    assert res.jobs["doomed"].deadline_met is False
+    assert res.jobs["nodl"].deadline_met is None
+
+
+def test_server_honours_real_time_arrival():
+    jobs = [Job("now", _chain_dag(32)),
+            Job("later", _chain_dag(32), arrival_s=0.05)]
+    res = PipelineServer(SchedulerConfig(n_workers=2)).serve(jobs)
+    later_first = min(e.t_start for e in res.events if e.job == "later")
+    assert later_first >= 0.05
+    assert res.jobs["later"].finish_s >= 0.05
+    assert res.jobs["later"].latency_s >= 0.0
+
+
+def test_server_tenant_service_totals():
+    jobs = [Job("a", _chain_dag(64), tenant="t1"),
+            Job("b", _chain_dag(64), tenant="t1"),
+            Job("c", _chain_dag(64), tenant="t2")]
+    res = PipelineServer(SchedulerConfig(n_workers=2), arbiter="fair").serve(jobs)
+    per_job = {n: r.service_s for n, r in res.jobs.items()}
+    assert res.tenant_service_s["t1"] == pytest.approx(
+        per_job["a"] + per_job["b"])
+    assert res.tenant_service_s["t2"] == pytest.approx(per_job["c"])
+
+
+def test_server_op_error_propagates():
+    def boom(inputs, s, z):
+        raise RuntimeError("job exploded")
+    jobs = [Job("ok", _chain_dag(16)),
+            Job("bad", PipelineDAG([Stage("s", 8, boom)]))]
+    with pytest.raises(RuntimeError, match="job exploded"):
+        PipelineServer(SchedulerConfig(n_workers=2)).serve(jobs)

@@ -1,0 +1,58 @@
+"""Docs gate: every code path referenced in README.md / DESIGN.md must exist.
+
+Scans backtick-quoted path-like references (``core/dag.py``,
+``benchmarks/run.py``, ``src/repro/...``; a trailing ``:symbol`` or
+anchor is ignored) and resolves each against the repo root, ``src/``,
+and ``src/repro/``. Exits non-zero listing any reference that resolves
+nowhere — so renames/moves can't silently rot the docs.
+
+    python tools/check_doc_refs.py [files...]   # default: README.md DESIGN.md
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_DOCS = ["README.md", "DESIGN.md"]
+# backtick-quoted path-like tokens: at least one '/' plus a known suffix
+# (bare filenames like `bench.json` are often generated outputs — skipped)
+PATTERN = re.compile(
+    r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+"
+    r"\.(?:py|md|toml|yml|yaml|txt|json|csv))(?::[A-Za-z0-9_.]+)?`"
+)
+SEARCH_PREFIXES = ["", "src/", "src/repro/"]
+
+
+def unresolved_refs(text: str) -> list[str]:
+    """Return the referenced paths in ``text`` that resolve to no file."""
+    missing = []
+    for ref in {m.group(1) for m in PATTERN.finditer(text)}:
+        if not any((ROOT / prefix / ref).exists() for prefix in SEARCH_PREFIXES):
+            missing.append(ref)
+    return sorted(missing)
+
+
+def main(argv: list[str]) -> int:
+    """Check each doc file; print failures and return the exit code."""
+    docs = argv or DEFAULT_DOCS
+    failures = 0
+    for name in docs:
+        doc = ROOT / name
+        if not doc.exists():
+            print(f"{name}: MISSING DOC FILE")
+            failures += 1
+            continue
+        missing = unresolved_refs(doc.read_text())
+        for ref in missing:
+            print(f"{name}: dangling code reference `{ref}`")
+        failures += len(missing)
+        if not missing:
+            print(f"{name}: all code references resolve")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
