@@ -2,9 +2,14 @@
 
     python benchmarks/check_gates.py artifacts/bench.csv
 
-Gates (both also property-tested in the tier-1 suite):
+Gates (all also property-tested in the tier-1 suite); every pattern listed
+for a row must capture a value >= 0:
   pipeline_dag_cc_regression    per-stage tuning never loses to the best
                                 uniform assignment (gain >= 0)
+  device_dag_linreg             fused super-table walker bit-equal to
+                                per-stage launches and the host executor
+                                (equal=1), and never slower than sequential
+                                launches in simulated makespan (sim_gain >= 0)
   pipeline_server_mixed_load    weighted-fair p99 job latency <= FIFO p99
                                 on the mixed workload (p99_gain >= 0)
 """
@@ -15,9 +20,10 @@ import re
 import sys
 from pathlib import Path
 
-GATES = {
-    "pipeline_dag_cc_regression": r"gain=(-?[\d.]+)%",
-    "pipeline_server_mixed_load": r"p99_gain=(-?[\d.]+)%",
+GATES: dict[str, tuple[str, ...]] = {
+    "pipeline_dag_cc_regression": (r"gain=(-?[\d.]+)%",),
+    "device_dag_linreg": (r"equal=(-?[\d.]+)", r"sim_gain=(-?[\d.]+)%"),
+    "pipeline_server_mixed_load": (r"p99_gain=(-?[\d.]+)%",),
 }
 TOLERANCE = -1e-6  # simulator determinism should make these exact
 
@@ -29,21 +35,22 @@ def main(path: str) -> int:
         name, _, derived = line.split(",", 2)
         rows[name] = derived
     failures = 0
-    for name, pattern in GATES.items():
+    for name, patterns in GATES.items():
         derived = rows.get(name)
         if derived is None:
             print(f"GATE MISSING: no `{name}` row in {path}")
             failures += 1
             continue
-        m = re.search(pattern, derived)
-        if m is None:
-            print(f"GATE MALFORMED: `{name}` lacks {pattern!r}: {derived}")
-            failures += 1
-            continue
-        gain = float(m.group(1))
-        verdict = "OK" if gain >= TOLERANCE else "FAIL"
-        print(f"{verdict}: {name} gain={gain:.3f}%")
-        failures += verdict == "FAIL"
+        for pattern in patterns:
+            m = re.search(pattern, derived)
+            if m is None:
+                print(f"GATE MALFORMED: `{name}` lacks {pattern!r}: {derived}")
+                failures += 1
+                continue
+            gain = float(m.group(1))
+            verdict = "OK" if gain >= TOLERANCE else "FAIL"
+            print(f"{verdict}: {name} {pattern.split('=')[0]}={gain:.3f}")
+            failures += verdict == "FAIL"
     return 1 if failures else 0
 
 

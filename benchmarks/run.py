@@ -10,6 +10,8 @@ the JSON is uploaded as a CI artifact).
   queue_*            centralized pop / steal costs (the lock path)
   executor_*         threaded end-to-end scheduling overhead
   pipeline_dag_*     §9 DAG runtime: per-stage tuning vs global baseline
+  device_dag_*       §11 device path: fused super-table walker vs per-stage
+                     launches (interpret mode)
   pipeline_server_*  §10 serving runtime: fair-share vs FIFO on mixed jobs
   cc_vee_*           the paper's CC hot loop on the real VEE
   schedule_quality_* device-side assignment quality (LPT vs round-robin)
@@ -178,6 +180,46 @@ def bench_pipeline_dag(quick: bool = False) -> None:
         "independent branches active together (real pool, us)")
 
 
+def bench_device_dag(quick: bool = False) -> None:
+    """Device-DAG rows (§11): the fused multi-stage Pallas walker vs one
+    launch per stage, on the linreg pipeline in interpret mode.
+
+    ``device_dag_linreg`` is the CI-gated row: ``equal=1`` asserts the
+    fused super-table run reproduces the per-stage-launch results (and
+    the host PipelineExecutor's, bit-wise), and ``sim_gain`` asserts the
+    fused launch is never slower than sequential launches in simulated
+    makespan (fused pays h_launch once; max-of-sums <= sum-of-maxes).
+    """
+    from repro.core import (PipelineExecutor, build_dag_tables,
+                            frozen_dag_makespans, select_offline_device_dag)
+    from repro.vee.apps import linreg_device_lowering, run_device_dag
+
+    n, d, tile = (512, 9, 64) if quick else (2048, 9, 64)
+    low = linreg_device_lowering(n, d, tile=tile)
+    units = n // tile
+    costs = {"moments": np.full(units, 1e-5),
+             "syrk_gemv": np.full(units, 2e-5)}
+    techs, _, _ = select_offline_device_dag(low.dag, costs, tile=1,
+                                            n_shards=1, passes=1)
+    t0 = time.perf_counter()
+    fused, ddt = run_device_dag(low, techs)
+    dt_fused = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    seq, _ = run_device_dag(low, techs, stagewise=True)
+    dt_seq = time.perf_counter() - t0
+    host = PipelineExecutor(low.dag, SchedulerConfig(
+        technique="SS", n_workers=1)).run()
+    equal = all(np.array_equal(fused[k], seq[k]) for k in fused) and all(
+        np.array_equal(np.asarray(host.values[k]), fused[k]) for k in fused)
+    f_ms, s_ms = frozen_dag_makespans(build_dag_tables(low.dag, 1, techs), costs)
+    gain = (s_ms - f_ms) / s_ms * 100
+    row("device_dag_linreg", dt_fused * 1e6,
+        f"equal={1 if equal else -1} wall_stagewise={dt_seq * 1e6:.1f}us "
+        f"sim_fused={f_ms * 1e6:.1f}us sim_seq={s_ms * 1e6:.1f}us "
+        f"techs={'/'.join(techs[s] for s in low.dag.stage_names)} "
+        f"sim_gain={gain:.4f}%")
+
+
 def bench_pipeline_server(quick: bool = False) -> None:
     """Multi-tenant serving rows (§10): p50/p99 job latency and makespan for
     a mixed workload of concurrent heterogeneous jobs, weighted-fair vs
@@ -257,6 +299,7 @@ def main(quick: bool = False) -> None:
     bench_queue_ops()
     bench_executor()
     bench_pipeline_dag(quick=quick)
+    bench_device_dag(quick=quick)
     bench_pipeline_server(quick=quick)
     if not quick:
         bench_cc_vee()

@@ -14,6 +14,7 @@ from .autotune import (
     default_search_space,
     select_offline,
     select_offline_dag,
+    select_offline_device_dag,
     select_offline_server,
 )
 from .coordinator import Coordinator, CoordinatorConfig, NodeSched
@@ -29,11 +30,14 @@ from .dag import (
     TaskEvent,
 )
 from .device_schedule import (
+    DeviceDagTables,
     assign_chunks,
+    build_dag_tables,
     build_task_table,
     cost_balanced_assignment,
     per_shard_tables,
     rebalance,
+    rebalance_dag,
 )
 from .executor import ExecutionStats, ScheduledExecutor, SchedulerConfig
 from .server import (
@@ -64,6 +68,7 @@ from .simulator import (
     ServerSimResult,
     SimOverheads,
     SimResult,
+    frozen_dag_makespans,
     simulate,
     simulate_dag,
     simulate_server,
@@ -78,7 +83,7 @@ __all__ = [
     "RangeTask", "tasks_from_schedule",
     "SchedulerConfig", "ScheduledExecutor", "ExecutionStats",
     "SimOverheads", "SimResult", "simulate", "DagSimResult", "simulate_dag",
-    "ServerSimResult", "simulate_server",
+    "frozen_dag_makespans", "ServerSimResult", "simulate_server",
     "DEP_FULL", "DEP_ELEMENTWISE", "Stage", "StageDep", "PipelineDAG",
     "PipelineExecutor", "StageResult", "DagResult", "TaskEvent",
     "Job", "JobState", "JobResult", "ServerResult", "ServerTaskEvent",
@@ -87,6 +92,8 @@ __all__ = [
     "Coordinator", "CoordinatorConfig", "NodeSched",
     "build_task_table", "assign_chunks", "per_shard_tables", "rebalance",
     "cost_balanced_assignment",
+    "DeviceDagTables", "build_dag_tables", "rebalance_dag",
     "select_offline", "OnlineTuner", "default_search_space",
     "select_offline_dag", "DagTuner", "select_offline_server",
+    "select_offline_device_dag",
 ]

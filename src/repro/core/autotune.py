@@ -32,7 +32,8 @@ from .simulator import SimOverheads, simulate, simulate_dag, simulate_server
 from .victim import VICTIM_STRATEGIES
 
 __all__ = ["select_offline", "OnlineTuner", "default_search_space",
-           "select_offline_dag", "DagTuner", "select_offline_server"]
+           "select_offline_dag", "DagTuner", "select_offline_server",
+           "select_offline_device_dag"]
 
 
 def default_search_space(include_ss: bool = False):
@@ -180,6 +181,58 @@ def select_offline_dag(
                     continue
                 trial = dict(assign)
                 trial[n] = c
+                v = score(trial)
+                if v < best:
+                    best, assign, improved = v, trial, True
+        if not improved:
+            break
+    return assign, best, uniform
+
+
+def select_offline_device_dag(
+    dag,
+    stage_costs: dict[str, np.ndarray],
+    tile: int = 1,
+    n_shards: int = 1,
+    overheads: SimOverheads = SimOverheads(),
+    include_ss: bool = False,
+    seed: int = 0,
+    passes: int = 2,
+) -> tuple[dict[str, str], float, dict[str, float]]:
+    """Per-stage TECHNIQUE selection for the device-DAG path (§11).
+
+    The device analogue of ``select_offline_dag``: scores assignments with
+    ``simulate_dag(frozen=True)`` — the fused-launch super-table replay —
+    instead of the host-pool model. Queue layout and victim strategy do
+    not exist on device (tables are frozen, stealing is persistent
+    re-balancing), so the space is the partitioning techniques alone.
+    Scores every uniform assignment first, then coordinate-descends per
+    stage accepting only improvements, so the result is never worse than
+    the best uniform technique. Returns
+    (per_stage_techniques, tuned_makespan, uniform_scores).
+    """
+    techs = [t for t in PARTITIONERS if include_ss or t != "SS"]
+    names = dag.stage_names
+
+    def score(assign: dict[str, str]) -> float:
+        """Frozen-replay makespan of one per-stage technique assignment."""
+        return simulate_dag(dag, stage_costs, assign, overheads=overheads,
+                            seed=seed, frozen=True, tile=tile,
+                            n_shards=n_shards).makespan
+
+    uniform = {t: score({n: t for n in names}) for t in techs}
+    best_tech = min(uniform, key=uniform.get)
+    assign = {n: best_tech for n in names}
+    best = uniform[best_tech]
+
+    for _ in range(max(1, passes)):
+        improved = False
+        for n in names:
+            for t in techs:
+                if t == assign[n]:
+                    continue
+                trial = dict(assign)
+                trial[n] = t
                 v = score(trial)
                 if v < best:
                     best, assign, improved = v, trial, True

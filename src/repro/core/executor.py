@@ -46,6 +46,9 @@ class ExecutionStats:
     steals: int = 0
     failed_steals: int = 0
     contended_pops: int = 0
+    # queue-access (lock round-trip) count: CentralizedQueue pops, or
+    # pop_local + steal attempts under PERCORE/PERGROUP — the pop-traffic
+    # axis on which queue layouts are compared.
     queue_pops: int = 0
 
     @property
@@ -116,12 +119,13 @@ class ScheduledExecutor:
             )
 
             def worker(worker_id: int) -> None:
-                """Drain the home queue, then steal in victim order."""
+                """Drain the home queue chunk-wise, then steal in victim order."""
                 home = queues.owner_of(worker_id)
                 while True:
-                    t = queues.pop_local(worker_id)
-                    if t is not None:
-                        record(worker_id, t)
+                    chunk = queues.pop_local(worker_id)
+                    if chunk:
+                        for t in chunk:
+                            record(worker_id, t)
                         continue
                     # out of local work: steal (victim order per strategy)
                     stolen: list[RangeTask] = []
@@ -136,6 +140,8 @@ class ScheduledExecutor:
             self._run_threads(worker, cfg.n_workers)
             stats.steals = queues.steals
             stats.failed_steals = queues.failed_steals
+            stats.queue_pops = (queues.local_pops + queues.steals
+                                + queues.failed_steals)
 
         stats.wall_time_s = time.perf_counter() - t_start
         if len(results) != len(tasks):

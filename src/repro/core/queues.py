@@ -68,12 +68,23 @@ class CentralizedQueue:
 
 
 class _WorkerQueue:
-    __slots__ = ("dq", "lock", "partitioner")
+    __slots__ = ("dq", "lock", "partitioner", "chunks", "pops", "steals",
+                 "failed_steals")
 
     def __init__(self, partitioner: Partitioner):
         self.dq: deque[RangeTask] = deque()
         self.lock = threading.Lock()
         self.partitioner = partitioner
+        # fill-time chunk boundaries (task counts), head-to-tail: pop_local
+        # takes a whole pre-filled chunk per lock round-trip (paper
+        # self-scheduling granularity), steal re-aligns the tail boundaries.
+        self.chunks: deque[int] = deque()
+        # per-queue counters, each mutated only under THIS queue's lock
+        # (a shared counter would race across queues); DistributedQueues
+        # sums them on read.
+        self.pops = 0
+        self.steals = 0
+        self.failed_steals = 0
 
 
 class DistributedQueues:
@@ -125,8 +136,6 @@ class DistributedQueues:
             for q in range(self.n_queues)
         ]
         self._fill(tasks)
-        self.steals = 0
-        self.failed_steals = 0
 
     # -- filling ---------------------------------------------------------------
     def _fill(self, tasks: list[RangeTask]) -> None:
@@ -149,8 +158,11 @@ class DistributedQueues:
                     if c == 0:
                         break
                     self._queues[q].dq.extend(blk[i : i + c])
+                    self._queues[q].chunks.append(min(c, len(blk) - i))
                     i += c
-                self._queues[q].dq.extend(blk[i:])  # safety: never drop tasks
+                if i < len(blk):  # safety: never drop tasks
+                    self._queues[q].dq.extend(blk[i:])
+                    self._queues[q].chunks.append(len(blk) - i)
         else:
             # PERCORE: global chunk sequence dealt round-robin to workers —
             # no pre-partitioning (the paper observes STATIC then loses
@@ -162,34 +174,78 @@ class DistributedQueues:
                 if c == 0:
                     break
                 self._queues[q % self.n_queues].dq.extend(tasks[i : i + c])
+                self._queues[q % self.n_queues].chunks.append(min(c, n - i))
                 i += c
                 q += 1
-            self._queues[0].dq.extend(tasks[i:])  # safety: never drop tasks
+            if i < n:  # safety: never drop tasks
+                self._queues[0].dq.extend(tasks[i:])
+                self._queues[0].chunks.append(n - i)
 
     # -- worker API --------------------------------------------------------------
+    @property
+    def local_pops(self) -> int:
+        """Total pop_local lock round-trips (incl. empty pops), all queues."""
+        return sum(q.pops for q in self._queues)
+
+    @property
+    def steals(self) -> int:
+        """Total successful steals across all victim queues."""
+        return sum(q.steals for q in self._queues)
+
+    @property
+    def failed_steals(self) -> int:
+        """Total steal probes that found an empty victim."""
+        return sum(q.failed_steals for q in self._queues)
+
     def owner_of(self, worker_id: int) -> int:
         """Home queue id of ``worker_id`` (its own, or its NUMA domain's)."""
         return self._home[worker_id]
 
-    def pop_local(self, worker_id: int) -> RangeTask | None:
-        """Take one task from the head of the worker's home queue."""
+    def pop_local(self, worker_id: int) -> list[RangeTask]:
+        """Take the next pre-filled chunk off the head of the home queue.
+
+        Queues are filled in technique-sized chunks; one lock round-trip
+        returns the WHOLE chunk recorded at fill time (the paper's
+        self-scheduling granularity) instead of a single task — restoring
+        chunked semantics at pop time and cutting lock traffic by the
+        chunk size. Returns [] when the queue is empty.
+        """
         q = self._queues[self.owner_of(worker_id)]
         with q.lock:
-            return q.dq.popleft() if q.dq else None
+            q.pops += 1
+            if not q.dq:
+                return []
+            c = q.chunks.popleft() if q.chunks else len(q.dq)
+            c = max(1, min(c, len(q.dq)))
+            return [q.dq.popleft() for _ in range(c)]
 
     def steal(self, thief_id: int, victim_queue: int) -> list[RangeTask]:
-        """Steal from the victim's tail; amount follows the technique (C.2)."""
+        """Steal from the victim's tail; amount follows the technique (C.2).
+
+        The stolen tasks are a contiguous tail run in their original
+        (ascending-range) order — the paper steals a chunk, not a reversed
+        chunk — so PERGROUP pre-partitioning locality survives the theft.
+        """
         q = self._queues[victim_queue]
         with q.lock:
             r = len(q.dq)
             if r == 0:
-                self.failed_steals += 1
+                q.failed_steals += 1
                 return []
             # chunk computed against the victim's remaining work
             part = make_partitioner(self.technique, r, self.n_workers, seed=self.seed)
             c = max(1, min(r, part.next_chunk(thief_id)))
             stolen = [q.dq.pop() for _ in range(c)]
-            self.steals += 1
+            stolen.reverse()  # tail run, original task order
+            rem = c  # re-align the victim's fill-time tail boundaries
+            while rem and q.chunks:
+                last = q.chunks.pop()
+                if last > rem:
+                    q.chunks.append(last - rem)
+                    rem = 0
+                else:
+                    rem -= last
+            q.steals += 1
             return stolen
 
     def queue_sizes(self) -> list[int]:
@@ -197,10 +253,16 @@ class DistributedQueues:
         return [len(q.dq) for q in self._queues]
 
     def push_local(self, worker_id: int, tasks: list[RangeTask]) -> None:
-        """Append ``tasks`` to the worker's home queue (steal returns)."""
+        """Append ``tasks`` to the worker's home queue (steal returns).
+
+        The pushed run is recorded as ONE chunk boundary, so the thief
+        drains its loot in a single pop_local round-trip.
+        """
         q = self._queues[self.owner_of(worker_id)]
         with q.lock:
             q.dq.extend(tasks)
+            if tasks:
+                q.chunks.append(len(tasks))
 
     def __len__(self) -> int:
         return sum(self.queue_sizes())

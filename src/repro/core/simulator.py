@@ -32,11 +32,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .device_schedule import DeviceDagTables, build_dag_tables
 from .partitioners import chunk_schedule, make_partitioner
 from .victim import make_victim_selector
 
 __all__ = ["SimOverheads", "SimResult", "simulate", "DagSimResult",
-           "simulate_dag", "ServerSimResult", "simulate_server"]
+           "simulate_dag", "frozen_dag_makespans", "ServerSimResult",
+           "simulate_server"]
 
 
 @dataclass(frozen=True)
@@ -48,6 +50,7 @@ class SimOverheads:
     h_probe: float = 2e-6      # victim probe
     numa_mult: float = 3.0     # cross-NUMA probe/steal multiplier
     locality_penalty: float = 0.3  # +30% task cost on non-contiguous access
+    h_launch: float = 5e-5     # device kernel-launch overhead (frozen replay)
 
 
 @dataclass
@@ -210,6 +213,7 @@ def simulate(
                     sp = make_partitioner(technique, r, n_workers, seed=seed)
                     c = max(1, min(r, sp.next_chunk(w)))
                     got = [vq.items.pop() for _ in range(c)]
+                    got.reverse()  # tail run in original (ascending) order
                     steals += 1
                     break
         if not got:
@@ -308,6 +312,85 @@ def _pop_chunk(st: _SimStage, w: int, t: float, ov: SimOverheads):
     return tid, s, z, cost, t_acc, t_end, wait
 
 
+def _resolve_row_costs(dag, stage_costs) -> dict[str, np.ndarray]:
+    """Per-row cost vector per stage: given, else cost_of_range, else unit."""
+    out = {}
+    for n in dag.stage_names:
+        st = dag.stages[n]
+        given = (stage_costs or {}).get(n)
+        if given is not None:
+            costs = np.asarray(given, dtype=float)
+        elif st.cost_of_range is not None:
+            costs = np.array([st.cost_of_range(i, 1) for i in range(st.n_rows)],
+                             dtype=float)
+        else:
+            costs = np.ones(st.n_rows)
+        if len(costs) != st.n_rows:
+            raise ValueError(f"stage {n!r}: {len(costs)} costs for {st.n_rows} rows")
+        out[n] = costs
+    return out
+
+
+def _simulate_frozen(ddt: DeviceDagTables, costs: dict[str, np.ndarray],
+                     ov: SimOverheads) -> DagSimResult:
+    """Replay per-shard super-tables: the device walker in virtual time.
+
+    Each shard drains its frozen slot sequence with no queue (h_local per
+    slot models the table-step overhead, h_launch the single fused
+    launch); the makespan is the slowest shard. Slot order already
+    encodes the DAG's edges (build_dag_tables), so no gating is needed.
+    """
+    names = list(ddt.stage_names)
+    start = {n: math.inf for n in names}
+    finish = {n: 0.0 for n in names}
+    busy = [0.0] * ddt.n_shards
+    shard_end = [0.0] * ddt.n_shards
+    for sh in range(ddt.n_shards):
+        t = ov.h_launch
+        for sid, s0, z in ddt.slots(sh):
+            name = names[sid]
+            c = float(costs[name][s0:s0 + z].sum())
+            start[name] = min(start[name], t)
+            t += ov.h_local + c
+            finish[name] = max(finish[name], t)
+            busy[sh] += c
+        shard_end[sh] = t
+    return DagSimResult(
+        makespan=max(shard_end, default=0.0), per_worker_busy=busy,
+        stage_start={n: (0.0 if math.isinf(start[n]) else start[n])
+                     for n in names},
+        stage_finish=dict(finish), queue_wait=0.0)
+
+
+def frozen_dag_makespans(
+    ddt: DeviceDagTables,
+    costs: dict[str, np.ndarray],
+    overheads: SimOverheads = SimOverheads(),
+) -> tuple[float, float]:
+    """(fused, per-stage-launch) virtual makespans of one super-table.
+
+    Fused: one launch drains every shard's whole table; makespan is
+    h_launch + the slowest shard. Sequential: one launch PER STAGE with a
+    barrier between launches (the pre-§11 device path) — each stage pays
+    its own h_launch and waits for its slowest shard. Since
+    max-of-sums <= sum-of-maxes and the fused path pays h_launch once,
+    fused <= sequential always (the ``device_dag_linreg`` CI gate).
+    """
+    names = list(ddt.stage_names)
+    ov = overheads
+    shard_total = np.zeros(ddt.n_shards)
+    stage_shard = np.zeros((len(names), ddt.n_shards))
+    for sh in range(ddt.n_shards):
+        for sid, s0, z in ddt.slots(sh):
+            c = ov.h_local + float(costs[names[sid]][s0:s0 + z].sum())
+            shard_total[sh] += c
+            stage_shard[sid, sh] += c
+    fused = ov.h_launch + float(shard_total.max(initial=0.0))
+    sequential = sum(ov.h_launch + float(stage_shard[k].max(initial=0.0))
+                     for k in range(len(names)))
+    return fused, sequential
+
+
 def simulate_dag(
     dag,
     stage_costs: dict[str, np.ndarray] | None = None,
@@ -315,6 +398,9 @@ def simulate_dag(
     n_workers: int = 20,
     overheads: SimOverheads = SimOverheads(),
     seed: int = 0,
+    frozen: DeviceDagTables | bool | None = None,
+    tile: int = 1,
+    n_shards: int | None = None,
 ) -> DagSimResult:
     """Simulate a PipelineDAG run on ``n_workers`` shared workers.
 
@@ -333,6 +419,13 @@ def simulate_dag(
     ``stage_costs`` entries are per-row cost vectors. A stage without an
     entry falls back to its own ``Stage.cost_of_range`` (evaluated per row),
     else to uniform unit costs.
+
+    ``frozen`` switches to the DEVICE path (DESIGN.md §11): pass a
+    DeviceDagTables to replay it, or True to freeze the DAG here with
+    ``build_dag_tables`` (techniques from ``stage_configs`` — combos or
+    bare technique strings — over ``n_shards`` shards, row tiles of
+    ``tile``) and predict the fused-launch makespan of the Pallas walker
+    instead of the host pool's.
     """
     names = dag.stage_names
     if stage_costs is None:
@@ -342,21 +435,26 @@ def simulate_dag(
     if isinstance(stage_configs, tuple):
         stage_configs = {n: stage_configs for n in names}
 
+    if frozen is not None and frozen is not False:
+        row_costs = _resolve_row_costs(dag, stage_costs)
+        if isinstance(frozen, DeviceDagTables):
+            ddt = frozen
+        else:
+            techniques = {}
+            for n in names:
+                cfg = stage_configs.get(n, "STATIC")
+                techniques[n] = cfg if isinstance(cfg, str) else _combo_of(cfg)[0]
+            ddt = build_dag_tables(dag, tile, techniques,
+                                   n_shards=n_shards or 1, seed=seed)
+        return _simulate_frozen(ddt, row_costs, overheads)
+
+    row_costs = _resolve_row_costs(dag, stage_costs)
     stages: dict[str, _SimStage] = {}
     for n in names:
         st = dag.stages[n]
         combo = _combo_of(stage_configs.get(n, ("STATIC", "CENTRALIZED", "SEQ")))
         tech, layout, _ = combo
-        given = stage_costs.get(n)
-        if given is not None:
-            costs = np.asarray(given, dtype=float)
-        elif st.cost_of_range is not None:
-            costs = np.array([st.cost_of_range(i, 1) for i in range(st.n_rows)],
-                             dtype=float)
-        else:
-            costs = np.ones(st.n_rows)
-        if len(costs) != st.n_rows:
-            raise ValueError(f"stage {n!r}: {len(costs)} costs for {st.n_rows} rows")
+        costs = row_costs[n]
         schedule = chunk_schedule(tech, st.n_rows, n_workers, seed=seed)
         stages[n] = _SimStage(n, [(d.producer, d.kind) for d in st.deps],
                               schedule, costs, layout.upper())

@@ -1,11 +1,13 @@
 """Pallas TPU kernels (validated interpret=True on CPU; TPU is the target).
 
 cc_propagate — DLS-task-table-scheduled CC propagation (the paper's VEE
-hot spot); flash_attention — tiled online-softmax attention; ssm_scan —
-Mamba2 chunked SSD; rwkv6_scan — RWKV6 chunked WKV. ops.py holds the jit'd
-wrappers, ref.py the pure-jnp oracles.
+hot spot); dag_walk — the multi-stage walker draining a whole
+pipeline-DAG super-table in one launch (DESIGN.md §11); flash_attention —
+tiled online-softmax attention; ssm_scan — Mamba2 chunked SSD;
+rwkv6_scan — RWKV6 chunked WKV. ops.py holds the jit'd wrappers, ref.py
+the pure-jnp oracles.
 """
 
-from . import ops, ref
+from . import dag_walk, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["dag_walk", "ops", "ref"]

@@ -28,8 +28,14 @@ DEFAULT_TILE_R = 256
 DEFAULT_TILE_C = 1024
 
 
-def _kernel(table_ref, G_ref, c_col_ref, c_row_ref, out_ref):
-    j = pl.program_id(1)
+def propagate_body(j, G_ref, c_col_ref, c_row_ref, out_ref):
+    """One (row-tile, col-tile) step of CC propagation on refs.
+
+    The single-stage kernel below and the multi-stage DAG walker
+    (kernels/dag_walk.py) share this body: in the walker it is the
+    ``propagate`` stage of the CC iteration super-table, with ``j`` the
+    inner (column-tile) grid index.
+    """
 
     @pl.when(j == 0)
     def _init():
@@ -40,6 +46,10 @@ def _kernel(table_ref, G_ref, c_col_ref, c_row_ref, out_ref):
     # labels are >= 1; masked entries contribute 0 (never win the max)
     vals = jnp.where(G > 0, cc[None, :], jnp.zeros_like(cc)[None, :])
     out_ref[...] = jnp.maximum(out_ref[...], vals.max(axis=1))
+
+
+def _kernel(table_ref, G_ref, c_col_ref, c_row_ref, out_ref):
+    propagate_body(pl.program_id(1), G_ref, c_col_ref, c_row_ref, out_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_r", "tile_c", "interpret"))

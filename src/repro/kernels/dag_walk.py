@@ -1,0 +1,314 @@
+"""Pallas multi-stage DAG walker: one launch drains a whole super-table.
+
+The single-stage device path (kernels/cc_propagate.py) freezes ONE
+operator's chunk sequence and launches once per operator — every stage
+boundary is a kernel launch, exactly the barrier the §9 host runtime
+removed. This module executes a whole pipeline-DAG super-table
+(core/device_schedule.py:build_dag_tables) in ONE launch per shard:
+
+* the super-table ``(n_slots, 3) = (stage, start, size)`` arrives via
+  scalar prefetch; the grid walks slots sequentially (a shard draining
+  its frozen queue), with a second grid axis for stages that need an
+  inner loop (e.g. CC propagation's column tiles);
+* the prefetched stage id selects the stage body with ``pl.when`` — each
+  ``WalkStage`` contributes a body over refs (cc_propagate's
+  ``propagate_body`` is the single-stage special case);
+* block index maps read the slot's row range from the table, so every
+  operand/output block follows the schedule (clamped for slots that
+  belong to other stages — those fetches are untouched and written back
+  verbatim);
+* a consumer stage reads its producer's OUTPUT ref directly: because
+  build_dag_tables orders a consumer tile's slot after its producer
+  tile's slot, the producer block is already final when fetched — the
+  trace-time analogue of §9 inter-stage chunk streaming.
+
+Supported edge reads: ``rows`` (elementwise dep on a ``concat`` producer
+— the consumer's row tile of the producer's output) and ``full`` (full
+dep on a ``sum`` producer — the whole accumulator; full deps on concat
+producers need a launch split, see build_dag_tables). ``dag_walk_stagewise``
+runs the same stages as one launch per stage (producer outputs re-fed as
+plain operands) — the baseline the fused walker is benchmarked against
+(``device_dag_linreg``); both paths execute identical per-tile ops in
+identical per-stage order, so their results match bit-wise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["WalkOperand", "WalkStage", "WalkCtx", "dag_walk",
+           "dag_walk_stagewise", "dag_walk_sharded"]
+
+
+@dataclass(frozen=True)
+class WalkOperand:
+    """One kernel input: a named array with per-axis block indexing.
+
+    ``index`` kinds per axis: ``row`` (the slot's row tile — block index
+    ``start // block``, clamped), ``inner`` (the inner grid index, for
+    stages that loop over column tiles), ``zero`` (whole axis in one
+    block).
+    """
+
+    name: str
+    block: tuple[int, ...]
+    index: tuple[str, ...]
+
+    def __post_init__(self):
+        if len(self.block) != len(self.index):
+            raise ValueError(f"operand {self.name!r}: block/index rank mismatch")
+        bad = set(self.index) - {"row", "inner", "zero"}
+        if bad:
+            raise ValueError(f"operand {self.name!r}: unknown index kinds {bad}")
+
+
+@dataclass(frozen=True)
+class WalkStage:
+    """One DAG stage lowered to a device body.
+
+    ``body(ctx, ins, out_ref)`` runs under ``pl.when(stage_id == k)``;
+    ``ins`` maps operand names and producer stage names (``reads``) to
+    refs, ``out_ref`` is this stage's output block. ``combine`` is
+    ``concat`` (row-blocked ``(n_rows, ...)`` output, each tile written
+    by its slot) or ``sum`` (one accumulator block, zero-initialized at
+    the first slot, accumulated in slot order). ``reads`` entries are
+    ``(producer, kind)`` with kind ``rows`` | ``full``. ``inner`` is how
+    many inner grid steps the body uses (1 = only ``ctx.inner == 0``).
+    """
+
+    name: str
+    n_rows: int
+    out_shape: tuple[int, ...]
+    out_dtype: Any
+    combine: str
+    body: Callable
+    operands: tuple[str, ...] = ()
+    reads: tuple[tuple[str, str], ...] = ()
+    inner: int = 1
+
+    def __post_init__(self):
+        if self.combine not in ("concat", "sum"):
+            raise ValueError(f"stage {self.name!r}: unknown combine {self.combine!r}")
+        if self.combine == "concat" and self.out_shape[0] != self.n_rows:
+            raise ValueError(
+                f"stage {self.name!r}: concat out_shape {self.out_shape} must "
+                f"lead with n_rows={self.n_rows}")
+        for _, kind in self.reads:
+            if kind not in ("rows", "full"):
+                raise ValueError(f"stage {self.name!r}: unknown read kind {kind!r}")
+
+
+@dataclass(frozen=True)
+class WalkCtx:
+    """Per-slot scalars handed to a stage body (traced values)."""
+
+    slot: Any    # grid slot index
+    inner: Any   # inner grid index (column tile)
+    start: Any   # slot start row
+    size: Any    # slot row count
+
+
+def _index_map(block: tuple[int, ...], kinds: tuple[str, ...],
+               shape: tuple[int, ...]):
+    """Block index map for one buffer: slot row tile / inner / constant."""
+    nb = [max(1, shape[a] // block[a]) for a in range(len(block))]
+
+    def imap(i, j, tbl):
+        out = []
+        for a, kind in enumerate(kinds):
+            if kind == "row":
+                out.append(jnp.minimum(tbl[i, 1] // block[a], nb[a] - 1))
+            elif kind == "inner":
+                out.append(jnp.minimum(j, nb[a] - 1))
+            else:
+                out.append(0)
+        return tuple(out)
+
+    return imap
+
+
+def _read_operand(stages_by_name: dict[str, WalkStage], prod: str, kind: str,
+                  tile: int) -> WalkOperand:
+    """Operand spec for reading producer ``prod``'s output as an input."""
+    p = stages_by_name[prod]
+    if kind == "rows":
+        if p.combine != "concat":
+            raise ValueError(f"rows-read of non-concat producer {prod!r}")
+        block = (tile,) + tuple(p.out_shape[1:])
+        index = ("row",) + ("zero",) * (len(p.out_shape) - 1)
+    else:
+        if p.combine != "sum":
+            raise ValueError(
+                f"full-read of concat producer {prod!r} needs a launch split "
+                "(see build_dag_tables)")
+        block = tuple(p.out_shape)
+        index = ("zero",) * len(p.out_shape)
+    return WalkOperand(prod, block, index)
+
+
+def _out_spec(stage: WalkStage, tile: int) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """(block, index kinds) of a stage output buffer."""
+    if stage.combine == "concat":
+        return ((tile,) + tuple(stage.out_shape[1:]),
+                ("row",) + ("zero",) * (len(stage.out_shape) - 1))
+    return tuple(stage.out_shape), ("zero",) * len(stage.out_shape)
+
+
+def dag_walk(
+    stages: list[WalkStage],
+    operands: list[WalkOperand],
+    values: dict[str, Any],
+    table: np.ndarray,
+    tile: int,
+    interpret: bool = True,
+) -> dict[str, jax.Array]:
+    """Drain one shard's super-table in a single Pallas launch.
+
+    ``table`` is ``(n_slots, 3) int32`` (stage, start, size) from
+    build_dag_tables (stage ids index ``stages``, which must be in the
+    same topological order). Returns {stage name: output array}; on a
+    multi-shard table a shard only fills the tiles it owns (combine with
+    ``dag_walk_sharded``).
+    """
+    table = np.ascontiguousarray(np.asarray(table, dtype=np.int32))
+    if table.ndim != 2 or table.shape[1] != 3:
+        raise ValueError(f"super-table must be (n_slots, 3), got {table.shape}")
+    by_name = {s.name: s for s in stages}
+    if len(by_name) != len(stages):
+        raise ValueError("duplicate stage names")
+    n_slots = len(table)
+    n_inner = max(s.inner for s in stages)
+    if n_slots == 0:
+        return {s.name: jnp.zeros(s.out_shape, s.out_dtype) for s in stages}
+
+    in_specs = []
+    for op in operands:
+        arr = values[op.name]
+        in_specs.append(pl.BlockSpec(op.block,
+                                     _index_map(op.block, op.index, arr.shape)))
+    out_specs, out_shapes = [], []
+    for s in stages:
+        block, kinds = _out_spec(s, tile)
+        out_specs.append(pl.BlockSpec(block, _index_map(block, kinds, s.out_shape)))
+        out_shapes.append(jax.ShapeDtypeStruct(tuple(s.out_shape), s.out_dtype))
+
+    n_ops = len(operands)
+
+    def kernel(tbl_ref, *refs):
+        ins = {op.name: refs[k] for k, op in enumerate(operands)}
+        outs = {s.name: refs[n_ops + k] for k, s in enumerate(stages)}
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        sid = tbl_ref[i, 0]
+        start = tbl_ref[i, 1]
+        size = tbl_ref[i, 2]
+
+        @pl.when((i == 0) & (j == 0))
+        def _init_sums():
+            for s in stages:
+                if s.combine == "sum":
+                    outs[s.name][...] = jnp.zeros(s.out_shape, s.out_dtype)
+
+        for k, s in enumerate(stages):
+            def run(s=s):
+                stage_ins = {n: ins[n] for n in s.operands}
+                for prod, _kind in s.reads:
+                    stage_ins[prod] = outs[prod] if prod in outs else ins[prod]
+                s.body(WalkCtx(i, j, start, size), stage_ins, outs[s.name])
+            pl.when((sid == k) & (j < s.inner) & (size > 0))(run)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_slots, n_inner),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(jnp.asarray(table), *[values[op.name] for op in operands])
+    return {s.name: o for s, o in zip(stages, out)}
+
+
+def dag_walk_stagewise(
+    stages: list[WalkStage],
+    operands: list[WalkOperand],
+    values: dict[str, Any],
+    table: np.ndarray,
+    tile: int,
+    interpret: bool = True,
+) -> dict[str, jax.Array]:
+    """One launch per stage: the pre-fusion baseline.
+
+    Each stage drains only its own slots of the super-table; producer
+    outputs from earlier launches are re-fed as plain operands. Identical
+    per-tile ops in identical per-stage order as the fused walker, so the
+    results match bit-wise — the fused path saves the launch boundaries,
+    not arithmetic.
+    """
+    table = np.asarray(table, dtype=np.int32)
+    ops_by_name = {o.name: o for o in operands}
+    by_name = {s.name: s for s in stages}
+    results: dict[str, jax.Array] = {}
+    for k, s in enumerate(stages):
+        sub = table[(table[:, 0] == k) & (table[:, 2] > 0)].copy()
+        sub[:, 0] = 0
+        stage_ops = [ops_by_name[n] for n in s.operands]
+        stage_vals = {n: values[n] for n in s.operands}
+        for prod, kind in s.reads:
+            stage_ops.append(_read_operand(by_name, prod, kind, tile))
+            stage_vals[prod] = results[prod]
+        solo = dataclasses.replace(
+            s, operands=s.operands + tuple(p for p, _ in s.reads), reads=())
+        out = dag_walk([solo], stage_ops, stage_vals, sub, tile,
+                       interpret=interpret)
+        results[s.name] = out[s.name]
+    return results
+
+
+def dag_walk_sharded(
+    stages: list[WalkStage],
+    operands: list[WalkOperand],
+    values: dict[str, Any],
+    tables: np.ndarray,
+    tile: int,
+    interpret: bool = True,
+) -> dict[str, np.ndarray]:
+    """Walk every shard's super-table and combine the per-shard outputs.
+
+    ``tables`` is ``(n_shards, max_slots, 3)``. concat outputs merge by
+    tile ownership; sum outputs add per-shard partials (ascending shard
+    order — deterministic, but a different association than one shard, so
+    bit-wise claims hold per shard count).
+    """
+    tables = np.asarray(tables, dtype=np.int32)
+    shard_outs = [dag_walk(stages, operands, values, tables[s], tile,
+                           interpret=interpret)
+                  for s in range(tables.shape[0])]
+    combined: dict[str, np.ndarray] = {}
+    for k, s in enumerate(stages):
+        if s.combine == "sum":
+            acc = shard_outs[0][s.name]
+            for o in shard_outs[1:]:
+                acc = acc + o[s.name]
+            combined[s.name] = np.asarray(acc)
+        else:
+            buf = np.zeros(tuple(s.out_shape),
+                           np.asarray(shard_outs[0][s.name]).dtype)
+            for sh in range(tables.shape[0]):
+                for sid, start, size in tables[sh]:
+                    if sid == k and size > 0:
+                        buf[start:start + size] = np.asarray(
+                            shard_outs[sh][s.name])[start:start + size]
+            combined[s.name] = buf
+    return combined

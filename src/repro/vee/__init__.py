@@ -1,16 +1,22 @@
 """Vectorized execution engine: data + operators -> tasks -> DaphneSched."""
 
 from .apps import (
+    DeviceLowering,
     cc_iteration_dag,
     cc_step_numpy,
     connected_components,
     connected_components_dag,
     linear_regression,
     linear_regression_dag,
+    linear_regression_device,
     linreg_dag,
+    linreg_device_lowering,
     recommendation_dag,
+    recommendation_device,
+    recommendation_device_lowering,
     recommendation_oracle,
     recommendation_pipeline,
+    run_device_dag,
 )
 from .engine import VEE, PipelineResult
 from .sparse import CSRMatrix, rmat_graph, replicated_graph
@@ -21,4 +27,7 @@ __all__ = [
     "cc_iteration_dag", "connected_components_dag", "linreg_dag",
     "linear_regression_dag", "recommendation_dag",
     "recommendation_pipeline", "recommendation_oracle",
+    "DeviceLowering", "run_device_dag", "linreg_device_lowering",
+    "linear_regression_device", "recommendation_device_lowering",
+    "recommendation_device",
 ]

@@ -41,6 +41,9 @@ __all__ = [
     "cc_iteration_dag", "connected_components_dag", "linreg_dag",
     "linear_regression_dag", "recommendation_dag",
     "recommendation_pipeline", "recommendation_oracle",
+    "DeviceLowering", "run_device_dag", "linreg_device_lowering",
+    "linear_regression_device", "recommendation_device_lowering",
+    "recommendation_device",
 ]
 
 
@@ -321,3 +324,300 @@ def recommendation_oracle(n_users: int, n_items: int, density: float = 0.3,
     norms = np.sqrt((R ** 2).sum(axis=0)) + 1e-9
     bias = R.mean(axis=1)
     return np.argmax(R / norms - bias[:, None], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# device lowerings (DESIGN.md §11): the same pipelines as one fused launch
+# through build_dag_tables + the Pallas multi-stage walker
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DeviceLowering:
+    """A pipeline lowered for the device-DAG path, host-checkable.
+
+    ``dag`` is a host PipelineDAG in TILE units (one task row = one
+    device row tile, so any host technique's chunks stay tile-aligned)
+    whose ops do the SAME per-tile float32 jnp math as the device
+    ``stages`` (kernels/dag_walk.py WalkStage specs over ``operands`` /
+    ``values``, in row space). Matrix products are written as
+    broadcast-multiply + ``sum(axis=0)`` in both: XLA fuses ``dot``
+    differently inside a kernel than eagerly (different summation order),
+    while plain reductions are fusion-stable — the bit-wise equality the
+    device tests assert depends on it. Host concat values are therefore
+    ``(n_tiles, tile, ...)``; ``reshape(-1, ...)`` recovers row space.
+
+    For sum stages the walker accumulates in flat ascending tile order
+    (any technique, one shard); the host matches it bit-wise when run
+    with ``technique="SS"`` (one-tile chunks) and ``n_workers=1`` —
+    coarser host chunks re-associate the float sum. ``finalize`` maps
+    stage values to the pipeline's answer (e.g. the linreg solve).
+    """
+
+    dag: PipelineDAG
+    stages: list
+    operands: list
+    values: dict
+    tile: int
+    finalize: object = None
+
+
+def run_device_dag(
+    lowering: DeviceLowering,
+    stage_techniques: dict | str | None = None,
+    n_shards: int = 1,
+    n_workers: int | None = None,
+    chunk_costs: dict | None = None,
+    seed: int = 0,
+    interpret: bool = True,
+    stagewise: bool = False,
+):
+    """Execute a DeviceLowering end-to-end on the device-DAG path.
+
+    Freezes the tile-unit DAG with ``build_dag_tables`` (per-stage
+    techniques), scales the super-table slots to row space, then drains
+    them with the fused multi-stage walker — or one launch per stage
+    when ``stagewise=True`` (the pre-fusion baseline the
+    ``device_dag_linreg`` bench row compares against). Returns
+    ``(values, tables)``: stage outputs as numpy arrays (row space) and
+    the DeviceDagTables (tile units) actually walked.
+    """
+    from ..core.device_schedule import build_dag_tables
+    from ..kernels.dag_walk import dag_walk_sharded, dag_walk_stagewise
+
+    ddt = build_dag_tables(
+        lowering.dag, 1, stage_techniques, n_shards=n_shards,
+        n_workers=n_workers, chunk_costs=chunk_costs, seed=seed)
+    rows = ddt.tables.copy()
+    rows[:, :, 1:] *= lowering.tile  # tile units -> row space for the walker
+    if stagewise:
+        if n_shards != 1:
+            raise ValueError("stagewise baseline runs single-shard")
+        out = dag_walk_stagewise(lowering.stages, lowering.operands,
+                                 lowering.values, rows[0],
+                                 lowering.tile, interpret=interpret)
+    else:
+        out = dag_walk_sharded(lowering.stages, lowering.operands,
+                               lowering.values, rows, lowering.tile,
+                               interpret=interpret)
+    return {k: np.asarray(v) for k, v in out.items()}, ddt
+
+
+def linreg_device_lowering(
+    num_rows: int,
+    num_cols: int,
+    tile: int = 64,
+    lam: float = 0.001,
+    seed: int = 1,
+) -> DeviceLowering:
+    """Paper Listing 2 lowered for the fused device walker.
+
+    Two sum stages joined by a barrier edge: ``moments`` accumulates
+    column sums/squared sums; ``syrk_gemv`` standardizes each row tile
+    against the FULL moments (read straight from the walker's
+    accumulator ref mid-launch) and accumulates X1^T X1 | X1^T y.
+    Host ops and device bodies share the per-tile float32 jnp math.
+    """
+    import jax.numpy as jnp
+
+    from ..kernels.dag_walk import WalkOperand, WalkStage
+
+    if num_rows % tile:
+        raise ValueError(f"num_rows={num_rows} must be a multiple of tile={tile}")
+    rng = np.random.default_rng(seed)
+    XY = rng.uniform(0.0, 1.0, size=(num_rows, num_cols)).astype(np.float32)
+    X, y = XY[:, :-1], XY[:, -1:]
+    d = num_cols - 1
+    n = num_rows
+    units = n // tile
+
+    def _moments_tile(Xb):
+        return jnp.stack([Xb.sum(axis=0), (Xb * Xb).sum(axis=0)])
+
+    def _syrk_tile(Xb, yb, M):
+        mean = M[0] / n
+        std = jnp.sqrt(jnp.maximum(M[1] / n - mean * mean, 0.0))
+        std = jnp.where(std == 0, jnp.ones_like(std), std)
+        X1 = jnp.concatenate(
+            [(Xb - mean) / std, jnp.ones((Xb.shape[0], 1), Xb.dtype)], axis=1)
+        # broadcast-multiply + reduce (not dot): fusion-stable bit-wise
+        A = (X1[:, :, None] * X1[:, None, :]).sum(axis=0)
+        b = (X1 * yb).sum(axis=0)
+        return jnp.concatenate([A, b[:, None]], axis=1)
+
+    def moments_op(inputs, s, z):
+        acc = None
+        for t in range(s, s + z):
+            v = _moments_tile(jnp.asarray(X[t * tile:(t + 1) * tile]))
+            acc = v if acc is None else acc + v
+        return acc
+
+    def syrk_op(inputs, s, z):
+        M = jnp.asarray(inputs["moments"])
+        acc = None
+        for t in range(s, s + z):
+            v = _syrk_tile(jnp.asarray(X[t * tile:(t + 1) * tile]),
+                           jnp.asarray(y[t * tile:(t + 1) * tile]), M)
+            acc = v if acc is None else acc + v
+        return acc
+
+    dag = PipelineDAG([
+        Stage("moments", units, moments_op, combine="sum"),
+        Stage("syrk_gemv", units, syrk_op, combine="sum",
+              deps=(StageDep("moments", DEP_FULL),)),
+    ])
+
+    def moments_body(ctx, ins, out):
+        out[...] += _moments_tile(ins["X"][...])
+
+    def syrk_body(ctx, ins, out):
+        out[...] += _syrk_tile(ins["X"][...], ins["y"][...], ins["moments"][...])
+
+    stages = [
+        WalkStage("moments", n, (2, d), jnp.float32, "sum", moments_body,
+                  operands=("X",)),
+        WalkStage("syrk_gemv", n, (d + 1, d + 2), jnp.float32, "sum",
+                  syrk_body, operands=("X", "y"),
+                  reads=(("moments", "full"),)),
+    ]
+    operands = [
+        WalkOperand("X", (tile, d), ("row", "zero")),
+        WalkOperand("y", (tile, 1), ("row", "zero")),
+    ]
+    values = {"X": jnp.asarray(X), "y": jnp.asarray(y)}
+
+    def finalize(stage_values: dict) -> np.ndarray:
+        Ab = np.asarray(stage_values["syrk_gemv"])
+        A, b = Ab[:, :-1], Ab[:, -1:]
+        A = A + np.eye(A.shape[0], dtype=A.dtype) * lam
+        return np.linalg.solve(A, b)
+
+    return DeviceLowering(dag, stages, operands, values, tile, finalize)
+
+
+def linear_regression_device(
+    num_rows: int,
+    num_cols: int,
+    tile: int = 64,
+    stage_techniques: dict | str | None = None,
+    lam: float = 0.001,
+    seed: int = 1,
+    interpret: bool = True,
+    stagewise: bool = False,
+):
+    """Paper Listing 2 end-to-end on the device-DAG path.
+
+    Returns (beta, stage values, DeviceDagTables). ``stagewise=True``
+    runs the one-launch-per-stage baseline instead of the fused walker.
+    """
+    low = linreg_device_lowering(num_rows, num_cols, tile=tile, lam=lam,
+                                 seed=seed)
+    vals, ddt = run_device_dag(low, stage_techniques, interpret=interpret,
+                               stagewise=stagewise)
+    return low.finalize(vals), vals, ddt
+
+
+def recommendation_device_lowering(
+    n_users: int,
+    n_items: int,
+    tile: int = 64,
+    density: float = 0.3,
+    seed: int = 0,
+) -> DeviceLowering:
+    """The two-branch recommendation DAG lowered for the fused walker.
+
+    ``item_norms`` (sum) and ``user_bias`` (concat) are independent;
+    ``scores`` reads item_norms in full (sum accumulator ref) and
+    user_bias elementwise (its own row tile of the concat buffer) —
+    exercising every edge kind the walker supports in one super-table.
+    """
+    import jax.numpy as jnp
+
+    from ..kernels.dag_walk import WalkOperand, WalkStage
+
+    if n_users % tile:
+        raise ValueError(f"n_users={n_users} must be a multiple of tile={tile}")
+    rng = np.random.default_rng(seed)
+    R = rng.uniform(0.0, 1.0, size=(n_users, n_items))
+    R = (R * (rng.uniform(size=(n_users, n_items)) < density)).astype(np.float32)
+    units = n_users // tile
+
+    def _norms_tile(Rb):
+        return (Rb * Rb).sum(axis=0)
+
+    def _bias_tile(Rb):
+        return Rb.mean(axis=1)
+
+    def _scores_tile(Rb, norms, bias):
+        return jnp.argmax(Rb / (jnp.sqrt(norms) + 1e-9) - bias[:, None],
+                          axis=1).astype(jnp.int32)
+
+    def item_norms_op(inputs, s, z):
+        acc = None
+        for t in range(s, s + z):
+            v = _norms_tile(jnp.asarray(R[t * tile:(t + 1) * tile]))
+            acc = v if acc is None else acc + v
+        return acc
+
+    def user_bias_op(inputs, s, z):
+        return jnp.stack([_bias_tile(jnp.asarray(R[t * tile:(t + 1) * tile]))
+                          for t in range(s, s + z)])
+
+    def scores_op(inputs, s, z):
+        norms = jnp.asarray(inputs["item_norms"])
+        return jnp.stack([
+            _scores_tile(jnp.asarray(R[t * tile:(t + 1) * tile]), norms,
+                         jnp.asarray(inputs["user_bias"][t]))
+            for t in range(s, s + z)
+        ])
+
+    dag = PipelineDAG([
+        Stage("item_norms", units, item_norms_op, combine="sum"),
+        Stage("user_bias", units, user_bias_op, combine="concat"),
+        Stage("scores", units, scores_op, combine="concat",
+              deps=(StageDep("item_norms", DEP_FULL),
+                    StageDep("user_bias", DEP_ELEMENTWISE))),
+    ])
+
+    def item_norms_body(ctx, ins, out):
+        out[...] += _norms_tile(ins["R"][...])
+
+    def user_bias_body(ctx, ins, out):
+        out[...] = _bias_tile(ins["R"][...])
+
+    def scores_body(ctx, ins, out):
+        out[...] = _scores_tile(ins["R"][...], ins["item_norms"][...],
+                                ins["user_bias"][...])
+
+    stages = [
+        WalkStage("item_norms", n_users, (n_items,), jnp.float32, "sum",
+                  item_norms_body, operands=("R",)),
+        WalkStage("user_bias", n_users, (n_users,), jnp.float32, "concat",
+                  user_bias_body, operands=("R",)),
+        WalkStage("scores", n_users, (n_users,), jnp.int32, "concat",
+                  scores_body, operands=("R",),
+                  reads=(("item_norms", "full"), ("user_bias", "rows"))),
+    ]
+    operands = [WalkOperand("R", (tile, n_items), ("row", "zero"))]
+    values = {"R": jnp.asarray(R)}
+    return DeviceLowering(dag, stages, operands, values, tile)
+
+
+def recommendation_device(
+    n_users: int,
+    n_items: int,
+    tile: int = 64,
+    stage_techniques: dict | str | None = None,
+    density: float = 0.3,
+    seed: int = 0,
+    interpret: bool = True,
+    stagewise: bool = False,
+):
+    """The recommendation pipeline end-to-end on the device-DAG path.
+
+    Returns (top_items, stage values, DeviceDagTables).
+    """
+    low = recommendation_device_lowering(n_users, n_items, tile=tile,
+                                         density=density, seed=seed)
+    vals, ddt = run_device_dag(low, stage_techniques, interpret=interpret,
+                               stagewise=stagewise)
+    return vals["scores"], vals, ddt

@@ -1,0 +1,333 @@
+"""Device-side pipeline-DAG execution tests (DESIGN.md §11).
+
+Covers the tentpole invariants:
+
+  * ``build_dag_tables`` slot ordering respects elementwise and full
+    edges for random DAG shapes/techniques/shard counts (property test);
+  * the fused multi-stage walker reproduces the host PipelineExecutor
+    bit-wise on the linreg and recommendation lowerings, and matches the
+    per-stage-launch baseline bit-wise;
+  * cc_propagate's body runs as the propagate stage of a CC iteration
+    super-table (the single-stage kernel as stage-body special case);
+  * frozen-replay simulation: fused makespan <= sequential launches;
+  * per-(stage, chunk) rebalancing reduces the hot shard's load while
+    preserving the slot-ordering invariants.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    PipelineDAG,
+    PipelineExecutor,
+    SchedulerConfig,
+    Stage,
+    StageDep,
+    build_dag_tables,
+    frozen_dag_makespans,
+    rebalance_dag,
+    select_offline_device_dag,
+    simulate_dag,
+)
+from repro.core.partitioners import PARTITIONERS
+
+TECHS = sorted(PARTITIONERS)
+
+
+def _dummy_op(inputs, s, z):
+    return np.zeros(z)
+
+
+def _random_dag(n_stages, n_rows, dep_choices):
+    """Chain/branch DAG over equal row counts; producers forced concat."""
+    stages = []
+    for i in range(n_stages):
+        deps = ()
+        if i > 0:
+            prod, kind = dep_choices[i - 1]
+            deps = (StageDep(f"s{prod % i}", kind),)
+        stages.append(Stage(f"s{i}", n_rows, _dummy_op, combine="concat",
+                            deps=deps))
+    return PipelineDAG(stages)
+
+
+def _check_table_invariants(dag, ddt, tile):
+    """Exactly-once tile coverage + per-shard dependency ordering."""
+    names = list(ddt.stage_names)
+    n_tiles = {n: dag.stages[n].n_rows // tile for n in names}
+    seen = {n: {} for n in names}          # tile -> (shard, slot index)
+    for sh in range(ddt.n_shards):
+        for pos, (sid, start, size) in enumerate(ddt.slots(sh)):
+            assert size == tile
+            name = names[sid]
+            t = start // tile
+            assert t not in seen[name], f"tile {t} of {name} emitted twice"
+            seen[name][t] = (sh, pos)
+    for n in names:
+        assert set(seen[n]) == set(range(n_tiles[n])), f"{n} tiles incomplete"
+        for p, kind in ddt.deps[n]:
+            for t, (sh, pos) in seen[n].items():
+                if kind == "elementwise":
+                    psh, ppos = seen[p][t]
+                    assert psh == sh, f"{n}:{t} not row-aligned with {p}"
+                    assert ppos < pos, f"{n}:{t} precedes producer tile"
+                else:
+                    assert all(pp < pos for _, pp in seen[p].values()), \
+                        f"{n}:{t} precedes full-dep producer {p}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_stages=st.integers(2, 4),
+    tiles=st.integers(2, 12),
+    n_shards=st.integers(1, 4),
+    tech_i=st.lists(st.integers(0, len(TECHS) - 1), min_size=4, max_size=4),
+    dep_kind=st.lists(st.booleans(), min_size=3, max_size=3),
+    prod=st.lists(st.integers(0, 3), min_size=3, max_size=3),
+    seed=st.integers(0, 3),
+)
+def test_build_dag_tables_slot_order(n_stages, tiles, n_shards, tech_i,
+                                     dep_kind, prod, seed):
+    tile = 4
+    dep_choices = [(prod[i], "elementwise" if dep_kind[i] else "full")
+                   for i in range(n_stages - 1)]
+    if any(k == "full" for _, k in dep_choices):
+        n_shards = 1
+    dag = _random_dag(n_stages, tiles * tile, dep_choices)
+    techniques = {f"s{i}": TECHS[tech_i[i]] for i in range(n_stages)}
+    ddt = build_dag_tables(dag, tile, techniques, n_shards=n_shards,
+                           n_workers=4, seed=seed)
+    _check_table_invariants(dag, ddt, tile)
+
+
+def test_full_dep_requires_single_shard():
+    a = Stage("a", 8, _dummy_op, combine="sum")
+    b = Stage("b", 8, _dummy_op, combine="sum", deps=(StageDep("a", "full"),))
+    dag = PipelineDAG([a, b])
+    with pytest.raises(ValueError, match="full dep"):
+        build_dag_tables(dag, 2, n_shards=2)
+
+
+def test_tile_must_divide_rows():
+    dag = PipelineDAG([Stage("a", 10, _dummy_op)])
+    with pytest.raises(ValueError, match="multiple of tile"):
+        build_dag_tables(dag, 4)
+
+
+def test_multi_elementwise_producers():
+    """Two elementwise producers: fine when identically sharded, a clear
+    up-front error (not a mid-merge crash) when their owners diverge."""
+    a = Stage("a", 16, _dummy_op, combine="concat")
+    b = Stage("b", 16, _dummy_op, combine="concat")
+    c = Stage("c", 16, _dummy_op, combine="concat",
+              deps=(StageDep("a", "elementwise"), StageDep("b", "elementwise")))
+    dag = PipelineDAG([a, b, c])
+    ddt = build_dag_tables(dag, 4, "GSS", n_shards=1, n_workers=2)
+    _check_table_invariants(dag, ddt, 4)
+    ddt2 = build_dag_tables(dag, 4, "STATIC", n_shards=2, n_workers=2)
+    _check_table_invariants(dag, ddt2, 4)
+    with pytest.raises(ValueError, match="identically-sharded"):
+        build_dag_tables(dag, 4, {"a": "STATIC", "b": "GSS", "c": "STATIC"},
+                         n_shards=2, n_workers=2)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: fused walker vs host PipelineExecutor, bit-wise
+# ---------------------------------------------------------------------------
+
+def test_linreg_device_matches_host_bitwise():
+    from repro.vee.apps import (linear_regression_oracle,
+                                linreg_device_lowering, run_device_dag)
+
+    low = linreg_device_lowering(512, 9, tile=64, seed=1)
+    # SS/1 worker: the host accumulates sum stages in flat ascending tile
+    # order, exactly like the walker (see DeviceLowering docstring)
+    host = PipelineExecutor(low.dag, SchedulerConfig(
+        technique="SS", n_workers=1)).run()
+    fused, ddt = run_device_dag(low, {"moments": "GSS", "syrk_gemv": "FAC2"})
+    seq, _ = run_device_dag(low, {"moments": "GSS", "syrk_gemv": "FAC2"},
+                            stagewise=True)
+    for k in ("moments", "syrk_gemv"):
+        assert np.array_equal(np.asarray(host.values[k]), fused[k]), k
+        assert np.array_equal(fused[k], seq[k]), k
+    beta = low.finalize(fused)
+    np.testing.assert_allclose(
+        beta, linear_regression_oracle(512, 9), atol=1e-4)
+
+
+def test_recommendation_device_matches_host_bitwise():
+    from repro.vee.apps import (recommendation_device,
+                                recommendation_device_lowering,
+                                recommendation_oracle, run_device_dag)
+
+    low = recommendation_device_lowering(256, 32, tile=32, seed=0)
+    host = PipelineExecutor(low.dag, SchedulerConfig(
+        technique="SS", n_workers=1)).run()
+    fused, _ = run_device_dag(low, "MFSC")
+    assert np.array_equal(np.asarray(host.values["item_norms"]),
+                          fused["item_norms"])
+    for k in ("user_bias", "scores"):  # host concat values are (tiles, tile)
+        assert np.array_equal(np.asarray(host.values[k]).reshape(-1),
+                              fused[k]), k
+    scores, _, _ = recommendation_device(256, 32, tile=32)
+    assert np.array_equal(scores, recommendation_oracle(256, 32))
+
+
+def test_recommendation_concat_insensitive_to_host_config():
+    """Concat stages write disjoint tiles: any host technique/worker count
+    reproduces the walker's buffers bit-wise."""
+    from repro.vee.apps import recommendation_device_lowering, run_device_dag
+
+    low = recommendation_device_lowering(128, 16, tile=16, seed=3)
+    fused, _ = run_device_dag(low, "GSS")
+    host = PipelineExecutor(low.dag, SchedulerConfig(
+        technique="MFSC", queue_layout="PERCORE", n_workers=4)).run()
+    for k in ("user_bias", "scores"):
+        assert np.array_equal(np.asarray(host.values[k]).reshape(-1),
+                              fused[k]), k
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_cc_iteration_super_table(n_shards):
+    """cc_propagate's body as the propagate stage of a CC super-table."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.cc_propagate import propagate_body
+    from repro.kernels.dag_walk import (WalkOperand, WalkStage, dag_walk,
+                                        dag_walk_sharded)
+
+    n, tile_r, tile_c = 256, 32, 64
+    rng = np.random.default_rng(7)
+    G = (rng.uniform(size=(n, n)) < 0.05).astype(np.float32)
+    np.fill_diagonal(G, 0)
+    c = rng.integers(1, 1000, n).astype(np.float32)
+
+    dag = PipelineDAG([
+        Stage("propagate", n, _dummy_op, combine="concat"),
+        Stage("changed", n, _dummy_op, combine="sum",
+              deps=(StageDep("propagate", "elementwise"),)),
+    ])
+    ddt = build_dag_tables(dag, tile_r,
+                           {"propagate": "MFSC", "changed": "STATIC"},
+                           n_shards=n_shards, n_workers=4)
+
+    def prop_body(ctx, ins, out):
+        propagate_body(ctx.inner, ins["G"], ins["c_col"], ins["c_row"], out)
+
+    def changed_body(ctx, ins, out):
+        out[...] += (ins["propagate"][...]
+                     != ins["c_row"][...]).sum().astype(jnp.int32)[None]
+
+    stages = [
+        WalkStage("propagate", n, (n,), jnp.float32, "concat", prop_body,
+                  operands=("G", "c_col", "c_row"), inner=n // tile_c),
+        WalkStage("changed", n, (1,), jnp.int32, "sum", changed_body,
+                  operands=("c_row",), reads=(("propagate", "rows"),)),
+    ]
+    operands = [
+        WalkOperand("G", (tile_r, tile_c), ("row", "inner")),
+        WalkOperand("c_col", (tile_c,), ("inner",)),
+        WalkOperand("c_row", (tile_r,), ("row",)),
+    ]
+    values = {"G": jnp.asarray(G), "c_col": jnp.asarray(c),
+              "c_row": jnp.asarray(c)}
+    if n_shards == 1:
+        out = dag_walk(stages, operands, values, ddt.tables[0], tile_r)
+    else:
+        out = dag_walk_sharded(stages, operands, values, ddt.tables, tile_r)
+    want = np.asarray(ref.cc_propagate_ref(jnp.asarray(G), jnp.asarray(c)))
+    assert np.array_equal(np.asarray(out["propagate"]), want)
+    assert int(np.asarray(out["changed"])[0]) == int((want != c).sum())
+
+
+# ---------------------------------------------------------------------------
+# frozen-replay simulation + device autotuning + rebalancing
+# ---------------------------------------------------------------------------
+
+def _cc_like_dag(tiles, tile):
+    n = tiles * tile
+    prop = Stage("prop", n, _dummy_op, combine="concat")
+    chk = Stage("chk", n, _dummy_op, combine="concat",
+                deps=(StageDep("prop", "elementwise"),))
+    return PipelineDAG([prop, chk])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tech_a=st.sampled_from(TECHS),
+    tech_b=st.sampled_from(TECHS),
+    n_shards=st.integers(1, 4),
+    seed=st.integers(0, 5),
+)
+def test_frozen_fused_never_slower_than_sequential(tech_a, tech_b, n_shards,
+                                                   seed):
+    tile, tiles = 4, 16
+    dag = _cc_like_dag(tiles, tile)
+    rng = np.random.default_rng(seed)
+    costs = {"prop": rng.pareto(1.5, tiles * tile) + 0.1,
+             "chk": np.ones(tiles * tile) * 0.2}
+    ddt = build_dag_tables(dag, tile, {"prop": tech_a, "chk": tech_b},
+                           n_shards=n_shards, n_workers=4, seed=seed)
+    fused, seq = frozen_dag_makespans(ddt, costs)
+    assert fused <= seq + 1e-12
+
+
+def test_frozen_simulate_matches_makespans_helper():
+    tile, tiles = 4, 8
+    dag = _cc_like_dag(tiles, tile)
+    costs = {"prop": np.ones(tiles * tile), "chk": np.ones(tiles * tile)}
+    ddt = build_dag_tables(dag, tile, "GSS", n_shards=2, n_workers=4)
+    res = simulate_dag(dag, costs, frozen=ddt)
+    fused, _ = frozen_dag_makespans(ddt, costs)
+    assert res.makespan == pytest.approx(fused)
+    assert res.stage_finish["chk"] <= res.makespan + 1e-12
+
+
+def test_select_offline_device_dag_never_worse_than_uniform():
+    tile, tiles = 4, 16
+    dag = _cc_like_dag(tiles, tile)
+    rng = np.random.default_rng(2)
+    costs = {"prop": rng.pareto(1.2, tiles * tile) + 0.05,
+             "chk": np.full(tiles * tile, 0.3)}
+    assign, best, uniform = select_offline_device_dag(
+        dag, costs, tile=tile, n_shards=4, passes=2)
+    assert set(assign) == {"prop", "chk"}
+    assert best <= min(uniform.values()) + 1e-12
+
+
+def test_rebalance_dag_moves_load_and_keeps_invariants():
+    tile, tiles = 4, 32
+    dag = _cc_like_dag(tiles, tile)
+    ddt = build_dag_tables(dag, tile, {"prop": "MFSC", "chk": "MFSC"},
+                           n_shards=4, n_workers=4, assignment="contiguous")
+    rng = np.random.default_rng(0)
+    # per-TILE loads, skewed: the first quarter of the row space (shard 0
+    # under contiguous assignment) is 10x as expensive
+    tile_load = {}
+    for name in ddt.stage_names:
+        base = rng.uniform(1.0, 2.0, tiles)
+        base[: tiles // 4] *= 10
+        tile_load[name] = base
+
+    def chunk_loads(d, name):
+        return np.array([tile_load[name][s:s + z].sum()
+                         for s, z in d.stage_chunks[name]])
+
+    def max_shard_load(d):
+        load = np.zeros(d.n_shards)
+        for name in d.stage_names:
+            cl = chunk_loads(d, name)
+            for c, sh in enumerate(d.chunk_shard[name]):
+                load[sh] += cl[c]
+        return load.max()
+
+    before = max_shard_load(ddt)
+    measured = {name: chunk_loads(ddt, name) for name in ddt.stage_names}
+    new = rebalance_dag(ddt, measured, max_moves=32)
+    for name in ddt.stage_names:  # every tile still scheduled exactly once
+        assert new.stage_chunks[name][:, 1].sum() == tiles
+    assert max_shard_load(new) < before
+    _check_table_invariants(dag, new, tile)

@@ -4,6 +4,8 @@ The critical invariant: every task executes exactly once under every
 (technique x layout x victim) combination — property-tested below.
 """
 
+import threading
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
@@ -16,6 +18,7 @@ from repro.core import (
     ScheduledExecutor,
     SchedulerConfig,
     chunk_schedule,
+    make_partitioner,
     make_victim_selector,
     tasks_from_schedule,
 )
@@ -128,3 +131,117 @@ def test_contended_pops_counted():
     cfg = SchedulerConfig(technique="SS", queue_layout="CENTRALIZED", n_workers=8)
     _, stats = ScheduledExecutor(cfg).run(tasks)
     assert stats.queue_pops >= 2000 / 1  # SS: one pop per task (plus empties)
+
+
+# ---------------------------------------------------------------------------
+# work-stealing order / chunk-granularity / pop-accounting fixes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(8, 400),
+    p=st.integers(2, 8),
+    technique=st.sampled_from(sorted(PARTITIONERS)),
+    layout=st.sampled_from(["PERCORE", "PERGROUP"]),
+    seed=st.integers(0, 5),
+)
+def test_steal_preserves_ascending_tail_order(n, p, technique, layout, seed):
+    """A stolen run is the victim's contiguous tail in original task order
+    (paper C.2 steals a chunk, not a reversed chunk)."""
+    tasks = [RangeTask(i, i, 1, lambda s, z: None, 1.0) for i in range(n)]
+    domains = [i * 2 // p for i in range(p)]
+    dq = DistributedQueues(tasks, technique, p, layout=layout,
+                           groups=domains, seed=seed)
+    for victim in range(dq.n_queues):
+        while True:
+            before = [t.task_id for t in dq._queues[victim].dq]
+            stolen = [t.task_id for t in dq.steal(0, victim)]
+            if not stolen:
+                break
+            assert stolen == sorted(stolen), "steal reversed the chunk"
+            assert stolen == before[len(before) - len(stolen):], \
+                "steal did not take the contiguous tail"
+
+
+def test_pop_local_returns_fill_time_chunks():
+    """pop_local drains whole pre-filled chunks: one lock round-trip per
+    technique-sized chunk, boundaries recorded at fill time."""
+    n, p = 500, 4
+    tasks = [RangeTask(i, i, 1, lambda s, z: None, 1.0) for i in range(n)]
+    dq = DistributedQueues(tasks, "GSS", p, layout="PERCORE")
+    part = make_partitioner("GSS", n, p)  # the fill's chunk sequence
+    expect, i, q = [], 0, 0
+    while i < n:
+        c = part.next_chunk()
+        if c == 0:
+            break
+        if q % p == 0:  # chunks dealt round-robin; queue 0's share
+            expect.append(min(c, n - i))
+        i += c
+        q += 1
+    got = []
+    while True:
+        chunk = dq.pop_local(0)
+        if not chunk:
+            break
+        got.append(len(chunk))
+        ids = [t.task_id for t in chunk]
+        assert ids == sorted(ids)
+    assert got == expect
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(50, 400),
+    p=st.integers(2, 6),
+    technique=st.sampled_from(["SS", "GSS", "MFSC", "FAC2", "STATIC"]),
+    seed=st.integers(0, 3),
+)
+def test_exactly_once_under_concurrent_chunked_stealing(n, p, technique, seed):
+    """Chunked pop_local + tail stealing never lose or duplicate a task."""
+    executed: list[int] = []
+    lock = threading.Lock()
+
+    def op(start, size):
+        with lock:
+            executed.append(start)
+
+    tasks = [RangeTask(i, i, 1, op, 1.0) for i in range(n)]
+    dq = DistributedQueues(tasks, technique, p, layout="PERCORE", seed=seed)
+    sel = make_victim_selector("RND", dq.n_queues, seed=seed)
+
+    def worker(w):
+        while True:
+            chunk = dq.pop_local(w)
+            if chunk:
+                for t in chunk:
+                    t.run()
+                continue
+            stolen = []
+            for v in sel.candidates(dq.owner_of(w)):
+                stolen = dq.steal(w, v)
+                if stolen:
+                    break
+            if not stolen:
+                return
+            dq.push_local(w, stolen)
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(p)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(executed) == list(range(n))
+
+
+@pytest.mark.parametrize("layout", ["PERCORE", "PERGROUP"])
+def test_distributed_queue_pops_counted(layout):
+    """stats.queue_pops reports pop/steal traffic under distributed layouts
+    (it used to stay 0, making layouts incomparable on pop traffic)."""
+    tasks, expected = _make_tasks(2000, "GSS")
+    cfg = SchedulerConfig(technique="GSS", queue_layout=layout,
+                          n_workers=4, numa_domains=(0, 0, 1, 1))
+    results, stats = ScheduledExecutor(cfg).run(tasks)
+    assert sum(results.values()) == expected
+    assert stats.queue_pops > 0
+    assert stats.queue_pops >= stats.steals + stats.failed_steals
