@@ -1,9 +1,16 @@
-"""Assert the CI-gated benchmark rows hold their invariants.
+"""Assert the CI-gated benchmark rows hold, and police bench history.
 
     python benchmarks/check_gates.py artifacts/bench.csv
+    python benchmarks/check_gates.py artifacts/bench.csv \
+        --against-baseline benchmarks/baseline.json
+    python benchmarks/check_gates.py artifacts/bench.csv \
+        --update-baseline benchmarks/baseline.json
 
-Gates (all also property-tested in the tier-1 suite); every pattern listed
-for a row must capture a value >= 0:
+Invariant gates (all also property-tested in the tier-1 suite); every
+pattern listed for a row must capture a value >= 0, and a gated row that is
+ABSENT or MALFORMED in the CSV fails the gate loudly — a renamed or dropped
+row must never silently pass:
+
   pipeline_dag_cc_regression    per-stage tuning never loses to the best
                                 uniform assignment (gain >= 0)
   device_dag_linreg             fused super-table walker bit-equal to
@@ -12,10 +19,28 @@ for a row must capture a value >= 0:
                                 launches in simulated makespan (sim_gain >= 0)
   pipeline_server_mixed_load    weighted-fair p99 job latency <= FIFO p99
                                 on the mixed workload (p99_gain >= 0)
+  online_linreg_adaptive        the online feedback loop lands within 1.10x
+                                of the offline search (margin110 >= 0) and
+                                strictly beats the median static technique
+                                (vs_median >= 0)
+  online_resize_merge           moldable resizing never loses to leaving
+                                SS chunk dust in place (resize_gain >= 0)
+
+Baseline mode (``--against-baseline``) is the bench-history regression
+gate: ``benchmarks/baseline.json`` holds the last ACCEPTED us_per_call per
+row plus a per-row tolerance (fractional headroom); the check fails when a
+current row exceeds ``accepted * (1 + tolerance)``, when an accepted row
+is missing from the CSV, or when a new CSV row has no accepted history
+yet (new rows must enter the baseline in the PR that introduces them). Simulated rows are deterministic and carry tight
+tolerances; wall-clock rows get wide ones (shared CI runners jitter).
+Re-accept new numbers with ``--update-baseline`` (it preserves hand-edited
+tolerances).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import re
 import sys
 from pathlib import Path
@@ -24,23 +49,62 @@ GATES: dict[str, tuple[str, ...]] = {
     "pipeline_dag_cc_regression": (r"gain=(-?[\d.]+)%",),
     "device_dag_linreg": (r"equal=(-?[\d.]+)", r"sim_gain=(-?[\d.]+)%"),
     "pipeline_server_mixed_load": (r"p99_gain=(-?[\d.]+)%",),
+    "online_linreg_adaptive": (r"margin110=(-?[\d.]+)%", r"vs_median=(-?[\d.]+)%"),
+    "online_resize_merge": (r"resize_gain=(-?[\d.]+)%",),
 }
 TOLERANCE = -1e-6  # simulator determinism should make these exact
 
+# rows whose us_per_call comes from the deterministic virtual-time
+# simulator: byte-stable across runs, so the baseline gate holds them tight.
+DETERMINISTIC_PREFIXES = ("pipeline_dag_cc_regression",
+                          "pipeline_server_mixed_load", "online_")
+DETERMINISTIC_TOLERANCE = 0.02
+# wall-clock rows jitter on shared CI runners; the wide default still
+# catches order-of-magnitude regressions (a lost GIL release, an O(n^2)
+# chunk loop) without flaking on scheduler noise.
+DEFAULT_TOLERANCE = 9.0
 
-def main(path: str) -> int:
-    """Check every gated row in ``path``; returns a process exit code."""
-    rows = {}
-    for line in Path(path).read_text().splitlines()[1:]:
-        name, _, derived = line.split(",", 2)
-        rows[name] = derived
+
+def read_rows(path: str) -> tuple[dict[str, tuple[float, str]], int]:
+    """Parse a bench CSV into {name: (us_per_call, derived)}.
+
+    Returns (rows, failures): malformed lines are counted loudly instead
+    of being skipped — a truncated CSV must not pass any gate.
+    """
+    p = Path(path)
+    if not p.exists():
+        print(f"BENCH CSV MISSING: {path} (did benchmarks/run.py fail?)")
+        return {}, 1
+    rows: dict[str, tuple[float, str]] = {}
     failures = 0
-    for name, patterns in GATES.items():
-        derived = rows.get(name)
-        if derived is None:
-            print(f"GATE MISSING: no `{name}` row in {path}")
+    for ln, line in enumerate(p.read_text().splitlines()[1:], start=2):
+        if not line.strip():
+            continue
+        parts = line.split(",", 2)
+        if len(parts) != 3:
+            print(f"MALFORMED ROW: {path}:{ln}: {line!r}")
             failures += 1
             continue
+        name, us, derived = parts
+        try:
+            rows[name] = (float(us), derived)
+        except ValueError:
+            print(f"MALFORMED ROW: {path}:{ln}: non-numeric us_per_call {us!r}")
+            failures += 1
+    return rows, failures
+
+
+def check_invariants(rows: dict[str, tuple[float, str]], path: str) -> int:
+    """Check every invariant-gated row; returns the failure count."""
+    failures = 0
+    for name, patterns in GATES.items():
+        got = rows.get(name)
+        if got is None:
+            print(f"GATE MISSING: no `{name}` row in {path} — a renamed or "
+                  f"dropped CI-gated row must not silently pass")
+            failures += 1
+            continue
+        _, derived = got
         for pattern in patterns:
             m = re.search(pattern, derived)
             if m is None:
@@ -51,8 +115,123 @@ def main(path: str) -> int:
             verdict = "OK" if gain >= TOLERANCE else "FAIL"
             print(f"{verdict}: {name} {pattern.split('=')[0]}={gain:.3f}")
             failures += verdict == "FAIL"
+    return failures
+
+
+def read_mode(csv_path: str) -> str | None:
+    """The quick/full provenance of a bench CSV (from bench_meta.json).
+
+    ``benchmarks/run.py`` drops the marker next to the CSV; a hand-built
+    CSV (tests) has none, which disables the mode cross-check.
+    """
+    meta = Path(csv_path).parent / "bench_meta.json"
+    if not meta.exists():
+        return None
+    try:
+        return json.loads(meta.read_text()).get("mode")
+    except (ValueError, OSError):
+        return None
+
+
+def check_baseline(rows: dict[str, tuple[float, str]], baseline_path: str,
+                   mode: str | None = None) -> int:
+    """Compare current rows against the accepted bench history; count fails."""
+    p = Path(baseline_path)
+    if not p.exists():
+        print(f"BASELINE MISSING: {baseline_path}")
+        return 1
+    data = json.loads(p.read_text())
+    accepted_mode = data.get("mode")
+    if mode and accepted_mode and mode != accepted_mode:
+        print(f"BASELINE MODE MISMATCH: baseline accepted from a "
+              f"{accepted_mode!r} run but this is a {mode!r} run — "
+              f"re-accept with --update-baseline from a matching run")
+        return 1
+    default_tol = float(data.get("default_tolerance", DEFAULT_TOLERANCE))
+    failures = 0
+    for name, spec in sorted(data.get("rows", {}).items()):
+        accepted = float(spec["us_per_call"])
+        tol = float(spec.get("tolerance", default_tol))
+        got = rows.get(name)
+        if got is None:
+            print(f"BASELINE ROW MISSING: `{name}` absent from the current "
+                  f"bench run — renamed/dropped rows must be re-accepted in "
+                  f"{baseline_path}")
+            failures += 1
+            continue
+        cur = got[0]
+        limit = accepted * (1.0 + tol)
+        ratio = cur / accepted if accepted > 0 else float("inf")
+        if cur > limit:
+            print(f"FAIL: {name} regressed: {cur:.3f}us vs accepted "
+                  f"{accepted:.3f}us (ratio {ratio:.2f} > 1+{tol:g})")
+            failures += 1
+        else:
+            print(f"OK: {name} {cur:.3f}us vs accepted {accepted:.3f}us "
+                  f"(ratio {ratio:.2f}, tolerance {tol:g})")
+    # the other direction: a NEW row with no accepted history has no gate —
+    # force it into the baseline in the same PR that introduces it
+    for name in sorted(set(rows) - set(data.get("rows", {}))):
+        print(f"ROW NOT IN BASELINE: `{name}` has no accepted history — "
+              f"run --update-baseline to start tracking it")
+        failures += 1
+    return failures
+
+
+def default_tolerance_for(name: str) -> float:
+    """The tolerance a row gets when first accepted into the baseline."""
+    if name.startswith(DETERMINISTIC_PREFIXES):
+        return DETERMINISTIC_TOLERANCE
+    return DEFAULT_TOLERANCE
+
+
+def update_baseline(rows: dict[str, tuple[float, str]], baseline_path: str,
+                    mode: str | None = None) -> int:
+    """Accept the current rows as the new baseline (tolerances preserved)."""
+    p = Path(baseline_path)
+    old = json.loads(p.read_text()) if p.exists() else {}
+    old_rows = old.get("rows", {})
+    out = {
+        "default_tolerance": old.get("default_tolerance", DEFAULT_TOLERANCE),
+        **({"mode": mode} if mode else
+           {"mode": old["mode"]} if old.get("mode") else {}),
+        "rows": {
+            name: {
+                "us_per_call": round(us, 3),
+                "tolerance": old_rows.get(name, {}).get(
+                    "tolerance", default_tolerance_for(name)),
+            }
+            for name, (us, _derived) in sorted(rows.items())
+        },
+    }
+    p.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"accepted {len(out['rows'])} rows into {baseline_path}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry; returns a process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("csv", nargs="?", default="artifacts/bench.csv")
+    ap.add_argument("--against-baseline", metavar="JSON", default=None,
+                    help="also gate rows against accepted bench history")
+    ap.add_argument("--update-baseline", metavar="JSON", default=None,
+                    help="accept the current rows as the new baseline")
+    args = ap.parse_args(argv)
+    rows, failures = read_rows(args.csv)
+    mode = read_mode(args.csv)
+    if args.update_baseline:
+        # a run that fails its own invariant gates must never be
+        # institutionalized as the accepted history
+        if failures or check_invariants(rows, args.csv):
+            print("refusing to accept a CSV that fails the invariant gates")
+            return 1
+        return update_baseline(rows, args.update_baseline, mode=mode)
+    failures += check_invariants(rows, args.csv)
+    if args.against_baseline:
+        failures += check_baseline(rows, args.against_baseline, mode=mode)
     return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "artifacts/bench.csv"))
+    sys.exit(main())

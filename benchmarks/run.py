@@ -13,6 +13,9 @@ the JSON is uploaded as a CI artifact).
   device_dag_*       §11 device path: fused super-table walker vs per-stage
                      launches (interpret mode)
   pipeline_server_*  §10 serving runtime: fair-share vs FIFO on mixed jobs
+  online_*           §12 runtime feedback loop: bandit-tuned makespan vs the
+                     offline search and the static techniques; moldable
+                     chunk-resize rescue of a mis-chunked stage
   cc_vee_*           the paper's CC hot loop on the real VEE
   schedule_quality_* device-side assignment quality (LPT vs round-robin)
   roofline_*         summary of artifacts/roofline.json (dry-run derived)
@@ -22,6 +25,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import re
 import sys
 import time
 from pathlib import Path
@@ -272,6 +277,69 @@ def bench_pipeline_server(quick: bool = False) -> None:
         f"jobs={len(jobs)} p99_gain={(p['fifo_99'] - p['fair_99']) / p['fifo_99'] * 100:.2f}%")
 
 
+def bench_online(quick: bool = False) -> None:
+    """Runtime feedback-loop rows (§12): the online bandit vs the offline
+    search and the static techniques, in deterministic virtual time.
+
+    ``online_linreg_adaptive`` is CI-gated: the online-tuned makespan must
+    land within 1.10x of the ``select_offline_dag``-tuned makespan on the
+    same workload (margin110 >= 0) and strictly beat the median static
+    technique (vs_median >= 0). ``online_resize_merge`` is also gated:
+    coalescing observed-uniform chunk dust (SS over a uniform stage) must
+    never lose to leaving the dust in place (resize_gain >= 0).
+    """
+    from repro.core import (OnlineScheduler, PipelineDAG, Stage,
+                            select_offline_dag, simulate_dag, tune_online_dag)
+    from repro.vee.apps import linreg_dag, recommendation_dag
+
+    n = 2048 if quick else 8192
+    dag, _ = linreg_dag(n, 9, seed=3)
+    rng = np.random.default_rng(11)
+    stage_costs = {"moments": rng.pareto(1.5, n) * 1e-7 + 2e-8,
+                   "syrk_gemv": np.full(n, 3e-7)}
+    _, offline_ms, uniform = select_offline_dag(
+        dag, stage_costs, n_workers=20, passes=1)
+    statics = sorted(uniform.values())
+    med_s = statics[len(statics) // 2]
+    rounds = 40
+    res = tune_online_dag(dag, stage_costs, n_workers=20, rounds=rounds, seed=0)
+    margin110 = (1.10 * offline_ms - res.makespan) / offline_ms * 100
+    vs_median = (med_s - res.makespan) / med_s * 100
+    tag = " ".join(f"{s}={'/'.join(c)}" for s, c in res.assign.items())
+    row("online_linreg_adaptive", res.makespan * 1e6,
+        f"offline={offline_ms * 1e6:.1f}us best_static={statics[0] * 1e6:.1f}us "
+        f"median_static={med_s * 1e6:.1f}us worst_static={statics[-1] * 1e6:.1f}us "
+        f"rounds={rounds} tuned {tag} "
+        f"margin110={margin110:.2f}% vs_median={vs_median:.2f}%")
+
+    # the same loop over the two-branch recommendation DAG (not gated on
+    # the offline margin: baseline.json tracks it instead)
+    rdag = recommendation_dag(1024 if quick else 4096, 16, seed=5)
+    rcosts = {"item_norms": np.full(rdag.stages["item_norms"].n_rows, 2e-7),
+              "user_bias": np.full(rdag.stages["user_bias"].n_rows, 5e-8),
+              "scores": rng.pareto(1.3, rdag.stages["scores"].n_rows) * 3e-7
+                        + 5e-8}
+    _, r_off, _ = select_offline_dag(rdag, rcosts, n_workers=20, passes=1)
+    r_on = tune_online_dag(rdag, rcosts, n_workers=20, rounds=rounds, seed=0)
+    row("online_recommendation_adaptive", r_on.makespan * 1e6,
+        f"offline={r_off * 1e6:.1f}us rounds={rounds} "
+        f"ratio={r_on.makespan / r_off:.4f}")
+
+    # moldable-resize rescue: SS chunk dust over a uniform stage is the
+    # paper's P5 pathology; the feedback loop must coalesce it
+    n2 = 2048
+    dust_dag = PipelineDAG([Stage("hot", n2, lambda i, s, z: None)])
+    dust = {"hot": np.full(n2, 1e-7)}
+    combo = ("SS", "CENTRALIZED", "SEQ")
+    static_ms = simulate_dag(dust_dag, dust, combo, n_workers=8).makespan
+    on = OnlineScheduler(seed=0, min_observe=2)
+    resized_ms = simulate_dag(dust_dag, dust, combo, n_workers=8,
+                              online=on).makespan
+    row("online_resize_merge", resized_ms * 1e6,
+        f"static={static_ms * 1e6:.1f}us resizes={on.resizes.get('hot', 0)} "
+        f"resize_gain={(static_ms - resized_ms) / static_ms * 100:.2f}%")
+
+
 def paper_figures() -> None:
     import paper_repro
     claims = paper_repro.main(scale=16)
@@ -292,7 +360,7 @@ def roofline_summary() -> None:
             f"frac={r['roofline_fraction']:.4f}")
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False, run_id: str | None = None) -> None:
     ART.mkdir(exist_ok=True)
     print("name,us_per_call,derived")
     bench_partitioners()
@@ -301,6 +369,7 @@ def main(quick: bool = False) -> None:
     bench_pipeline_dag(quick=quick)
     bench_device_dag(quick=quick)
     bench_pipeline_server(quick=quick)
+    bench_online(quick=quick)
     if not quick:
         bench_cc_vee()
         bench_schedule_quality()
@@ -310,13 +379,29 @@ def main(quick: bool = False) -> None:
         f.write("name,us_per_call,derived\n")
         for n, u, d in ROWS:
             f.write(f"{n},{u:.3f},{d}\n")
-    (ART / "bench.json").write_text(json.dumps(
-        [{"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS],
-        indent=2) + "\n")
+    payload = [{"name": n, "us_per_call": u, "derived": d} for n, u, d in ROWS]
+    (ART / "bench.json").write_text(json.dumps(payload, indent=2) + "\n")
+    # bench-history stamp: one immutable JSON per run, keyed by the CI run
+    # id (or a local timestamp), uploaded as an artifact so regressions can
+    # be traced back through run history and baseline.json re-accepted
+    # from any past run's numbers.
+    rid = run_id or os.environ.get("GITHUB_RUN_ID") \
+        or time.strftime("local-%Y%m%d-%H%M%S")
+    rid = re.sub(r"[^A-Za-z0-9._-]", "_", str(rid))
+    (ART / f"BENCH_{rid}.json").write_text(json.dumps(
+        {"run_id": rid, "quick": quick, "rows": payload}, indent=2) + "\n")
+    # provenance marker read by check_gates.py: baselines accepted from a
+    # full run must not gate quick CI runs (different row sets and sizes)
+    (ART / "bench_meta.json").write_text(json.dumps(
+        {"run_id": rid, "mode": "quick" if quick else "full"}) + "\n")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="sub-minute smoke subset (CI perf rows)")
-    main(quick=ap.parse_args().quick)
+    ap.add_argument("--run-id", default=None,
+                    help="bench-history stamp id (default: $GITHUB_RUN_ID "
+                         "or a local timestamp)")
+    args = ap.parse_args()
+    main(quick=args.quick, run_id=args.run_id)

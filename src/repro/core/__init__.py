@@ -5,17 +5,20 @@ work *assignment* (centralized self-scheduling, or distributed queues with
 technique-driven work stealing and 4 victim-selection strategies), plus the
 distributed coordinator, the TPU device-schedule adaptation, the
 auto-selection extension (the paper's stated future work), the pipeline-DAG
-runtime (DESIGN.md §9), and the multi-tenant serving runtime (DESIGN.md §10).
+runtime (DESIGN.md §9), the multi-tenant serving runtime (DESIGN.md §10),
+and the online adaptive-scheduling feedback loop (DESIGN.md §12).
 """
 
 from .autotune import (
     DagTuner,
+    OnlineTuneResult,
     OnlineTuner,
     default_search_space,
     select_offline,
     select_offline_dag,
     select_offline_device_dag,
     select_offline_server,
+    tune_online_dag,
 )
 from .coordinator import Coordinator, CoordinatorConfig, NodeSched
 from .dag import (
@@ -40,6 +43,19 @@ from .device_schedule import (
     rebalance_dag,
 )
 from .executor import ExecutionStats, ScheduledExecutor, SchedulerConfig
+from .online import (
+    SELECTORS,
+    ChunkObservation,
+    EXP3Selector,
+    FeedbackLog,
+    OnlineChoice,
+    OnlineRound,
+    OnlineScheduler,
+    StageFeedback,
+    UCB1Selector,
+    default_online_arms,
+    replay_online_dag,
+)
 from .server import (
     ARBITERS,
     Arbiter,
@@ -96,4 +112,8 @@ __all__ = [
     "select_offline", "OnlineTuner", "default_search_space",
     "select_offline_dag", "DagTuner", "select_offline_server",
     "select_offline_device_dag",
+    "ChunkObservation", "StageFeedback", "FeedbackLog", "OnlineChoice",
+    "OnlineRound", "OnlineScheduler", "UCB1Selector", "EXP3Selector",
+    "SELECTORS", "default_online_arms", "replay_online_dag",
+    "OnlineTuneResult", "tune_online_dag",
 ]

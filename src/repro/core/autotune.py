@@ -27,13 +27,14 @@ from dataclasses import dataclass
 import numpy as np
 
 from .executor import SchedulerConfig
+from .online import OnlineScheduler, default_online_arms, replay_online_dag
 from .partitioners import PARTITIONERS
 from .simulator import SimOverheads, simulate, simulate_dag, simulate_server
 from .victim import VICTIM_STRATEGIES
 
 __all__ = ["select_offline", "OnlineTuner", "default_search_space",
            "select_offline_dag", "DagTuner", "select_offline_server",
-           "select_offline_device_dag"]
+           "select_offline_device_dag", "OnlineTuneResult", "tune_online_dag"]
 
 
 def default_search_space(include_ss: bool = False):
@@ -319,6 +320,64 @@ def select_offline_server(
         if not improved:
             break
     return assign, best, baseline
+
+
+@dataclass
+class OnlineTuneResult:
+    """Outcome of one ``tune_online_dag`` feedback-loop run.
+
+    ``assign`` is the converged per-stage combo map, ``makespan`` its
+    simulated makespan (the "online-tuned" number the CI gate compares
+    against the offline search), ``history`` the per-round OnlineRound
+    records, and ``online`` the trained OnlineScheduler — hand it to a
+    PipelineExecutor/PipelineServer to keep learning on the real pool.
+    """
+
+    assign: dict[str, tuple[str, str, str]]
+    makespan: float
+    history: list
+    online: OnlineScheduler
+
+
+def tune_online_dag(
+    dag,
+    stage_costs: dict[str, np.ndarray],
+    n_workers: int,
+    rounds: int = 40,
+    selector: str = "ucb",
+    arms: list[tuple[str, str, str]] | None = None,
+    include_ss: bool = False,
+    resize: bool = True,
+    overheads: SimOverheads = SimOverheads(),
+    seed: int = 0,
+    online: OnlineScheduler | None = None,
+) -> OnlineTuneResult:
+    """ONLINE per-stage selection: the closed-loop counterpart of
+    ``select_offline_dag``.
+
+    Where the offline search sweeps every combo against the cost model up
+    front, this entry point trains a core.online.OnlineScheduler by
+    actually *running* the DAG ``rounds`` times in virtual time
+    (``replay_online_dag``): each round the per-stage bandits pick combos,
+    the replay feeds chunk observations (and moldable resizes) back, and
+    the stage spans reward the bandits. Converges to within the bandit's
+    regret of the best static technique without ever enumerating the
+    space — the mode that works when the workload drifts or the cost
+    model lies. Pass ``online`` to continue training an existing
+    scheduler (e.g. one already warmed on the real pool).
+    """
+    if online is None:
+        online = OnlineScheduler(
+            selector=selector,
+            arms=arms if arms is not None else default_online_arms(include_ss),
+            resize=resize, seed=seed)
+    history = replay_online_dag(
+        dag, stage_costs, online, rounds=rounds, n_workers=n_workers,
+        overheads=overheads, seed=seed)
+    assign = online.best_combos(list(dag.stage_names))
+    final = simulate_dag(dag, stage_costs, assign, n_workers=n_workers,
+                         overheads=overheads, seed=seed).makespan
+    return OnlineTuneResult(assign, final, history, online)
 
 
 @dataclass

@@ -49,6 +49,7 @@ from typing import Any, Callable
 import numpy as np
 
 from .executor import SchedulerConfig
+from .online import ChunkObservation, OnlineChoice
 from .partitioners import chunk_schedule
 from .victim import make_victim_selector
 
@@ -212,7 +213,7 @@ class _StageRun:
 
     __slots__ = ("stage", "cfg", "schedule", "tasks", "queues", "home",
                  "selector", "row_done", "remaining", "out", "acc", "value",
-                 "done", "costs", "t_first", "t_last")
+                 "done", "costs", "executed", "resizes", "t_first", "t_last")
 
     def __init__(self, stage: Stage, cfg: SchedulerConfig, domains: list[int]):
         self.stage = stage
@@ -222,34 +223,25 @@ class _StageRun:
         self.tasks = [(i, int(s), int(z)) for i, (s, z) in enumerate(self.schedule)]
         layout = cfg.queue_layout.upper()
         if layout == "CENTRALIZED" or not self.tasks:
-            self.queues = [deque(self.tasks)]
+            self.queues = [deque()]
             self.home = [0] * cfg.n_workers
             self.selector = None
         elif layout == "PERCORE":
-            # global chunk sequence dealt round-robin (mirrors DistributedQueues)
             self.queues = [deque() for _ in range(cfg.n_workers)]
-            for k, t in enumerate(self.tasks):
-                self.queues[k % cfg.n_workers].append(t)
             self.home = list(range(cfg.n_workers))
             self.selector = make_victim_selector(
                 cfg.victim_strategy, cfg.n_workers, numa_domains=domains,
                 seed=cfg.seed)
         elif layout == "PERGROUP":
-            # pre-partition the ROW space into contiguous per-domain blocks
-            # (spatial locality, mirroring DistributedQueues): assign each
-            # chunk by its start row, not by position in the chunk sequence —
-            # decreasing techniques front-load the sequence with huge chunks.
             nq = max(domains) + 1
             self.queues = [deque() for _ in range(nq)]
-            for t in self.tasks:
-                owner = min(nq - 1, t[1] * nq // max(1, stage.n_rows))
-                self.queues[owner].append(t)
             self.home = list(domains)
             self.selector = make_victim_selector(
                 cfg.victim_strategy, nq, numa_domains=list(range(nq)),
                 seed=cfg.seed)
         else:
             raise ValueError(f"unknown queue layout {cfg.queue_layout!r}")
+        self._deal(self.tasks)
         self.row_done = np.zeros(stage.n_rows, dtype=bool)
         self.remaining = len(self.tasks)
         self.out: np.ndarray | None = None   # concat buffer
@@ -257,8 +249,68 @@ class _StageRun:
         self.value: Any = None
         self.done = self.remaining == 0
         self.costs = np.zeros(len(self.tasks))
+        self.executed = np.zeros(len(self.tasks), dtype=bool)
+        self.resizes = 0    # moldable interventions on THIS run (budget key)
         self.t_first: float | None = None
         self.t_last: float | None = None
+
+    def pending_chunks(self) -> list[tuple[int, int]]:
+        """(start, size) of chunks dealt to queues but not yet popped."""
+        return [(s, z) for q in self.queues for (_i, s, z) in q]
+
+    def _deal(self, tasks) -> None:
+        """Append task tuples to the queues per this stage's layout.
+
+        One implementation serves the initial deal and every moldable
+        re-deal: PERCORE deals the chunk sequence round-robin (mirroring
+        DistributedQueues), PERGROUP pre-partitions the ROW space into
+        contiguous per-domain blocks by each chunk's start row (spatial
+        locality — decreasing techniques front-load the sequence with
+        huge chunks, so position-based dealing would skew the groups).
+        """
+        nq = len(self.queues)
+        if nq == 1:
+            self.queues[0].extend(tasks)
+        elif self.cfg.queue_layout.upper() == "PERCORE":
+            for k, t in enumerate(tasks):
+                self.queues[k % nq].append(t)
+        else:  # PERGROUP
+            for t in tasks:
+                owner = min(nq - 1, t[1] * nq // max(1, self.stage.n_rows))
+                self.queues[owner].append(t)
+
+    def resize_remaining(self, new_chunks: list[tuple[int, int]]) -> int:
+        """Replace every queued (unpopped) chunk with ``new_chunks``.
+
+        The moldable-resizing hook (core/online.py): in-flight and
+        completed chunks keep their ids; the queued remainder is dropped
+        and re-dealt as fresh tasks covering exactly the same rows.
+        Caller holds the runtime lock. Returns the change in outstanding
+        task count, which the caller must fold into its own remaining
+        totals.
+        """
+        queued = [t for q in self.queues for t in q]
+        if sum(z for _, _, z in queued) != sum(int(z) for _, z in new_chunks):
+            raise ValueError(
+                f"stage {self.stage.name!r}: resize must cover exactly the "
+                f"queued rows")
+        for q in self.queues:
+            q.clear()
+        base = len(self.costs)
+        tasks = [(base + k, int(s), int(z))
+                 for k, (s, z) in enumerate(new_chunks)]
+        self.schedule = np.vstack([
+            np.asarray(self.schedule).reshape(-1, 2),
+            np.array([[s, z] for _, s, z in tasks]),
+        ]).astype(np.int32)
+        self.costs = np.concatenate([self.costs, np.zeros(len(tasks))])
+        self.executed = np.concatenate(
+            [self.executed, np.zeros(len(tasks), dtype=bool)])
+        self._deal(tasks)
+        self.resizes += 1
+        delta = len(tasks) - len(queued)
+        self.remaining += delta
+        return delta
 
     def record(self, task, value, dt, rel0, rel1) -> None:
         """Fold one completed chunk into the stage state (caller holds lock)."""
@@ -276,12 +328,18 @@ class _StageRun:
             self.acc = value if self.acc is None else self.acc + value
         self.row_done[s:s + z] = True
         self.costs[i] = dt
+        self.executed[i] = True
         self.t_first = rel0 if self.t_first is None else min(self.t_first, rel0)
         self.t_last = rel1 if self.t_last is None else max(self.t_last, rel1)
         self.remaining -= 1
         if self.remaining == 0:
             self.done = True
             self.value = self.out if self.stage.combine == "concat" else self.acc
+            if not self.executed.all():
+                # moldable resizes replaced some planned chunks: compact the
+                # realized schedule/costs to the chunks that actually ran
+                self.schedule = np.asarray(self.schedule).reshape(-1, 2)[self.executed]
+                self.costs = self.costs[self.executed]
 
 
 def _task_ready(sr: _StageRun, runs: dict[str, _StageRun], task) -> bool:
@@ -340,6 +398,15 @@ class PipelineExecutor:
     stage: values may be SchedulerConfig or a (technique, layout, victim)
     combo as produced by the auto-tuners; ``Stage.config`` takes precedence
     over the default but below ``per_stage``.
+
+    ``online`` (a core.online.OnlineScheduler) closes the feedback loop:
+    stages without an explicit ``per_stage`` override play the combo the
+    stage's bandit suggests for this run, every completed chunk streams
+    into the online feedback log, the unpopped remainder of a stage is
+    re-chunked mid-run when the scheduler's moldable resizer asks for it,
+    and each stage's realized span is credited back to its bandit when the
+    run ends — so repeated runs (pipeline iterations, serving rounds)
+    converge onto the best observed configuration.
     """
 
     def __init__(
@@ -347,21 +414,33 @@ class PipelineExecutor:
         dag: PipelineDAG,
         config: SchedulerConfig,
         per_stage: dict[str, SchedulerConfig | tuple[str, str, str]] | None = None,
+        online=None,
     ):
         self.dag = dag
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
         self._per_stage = dict(per_stage or {})
-
-    def _resolve(self, stage: Stage) -> SchedulerConfig:
-        return _resolve_stage_config(
-            self.config, stage, self._per_stage.get(stage.name))
+        self._online = online
 
     def run(self) -> DagResult:
         """Execute every stage to completion on the shared pool."""
-        runs = {name: _StageRun(self.dag.stages[name], self._resolve(self.dag.stages[name]),
-                                self._domains)
+        online = self._online
+        overrides: dict = dict(self._per_stage)
+        choices: dict[str, OnlineChoice] = {}
+        if online is not None:
+            for name in self.dag.order:
+                # explicit per_stage / Stage.config pins always win over
+                # the bandit (matching PipelineServer.build_stage)
+                if name not in overrides and self.dag.stages[name].config is None:
+                    ch = online.suggest(name)
+                    choices[name] = ch
+                    overrides[name] = ch.combo
+        runs = {name: _StageRun(
+                    self.dag.stages[name],
+                    _resolve_stage_config(self.config, self.dag.stages[name],
+                                          overrides.get(name)),
+                    self._domains)
                 for name in self.dag.order}
         order = [runs[n] for n in self.dag.order]
         nstages = len(order)
@@ -385,6 +464,15 @@ class PipelineExecutor:
             busy[wid] += dt
             ntasks[wid] += 1
             steals[0] += int(stolen)
+            if online is not None:
+                online.record(ChunkObservation(
+                    sr.stage.name, i, s, z, dt, wid, rel1))
+                if not sr.done and online.may_resize(sr.stage.name, sr.resizes):
+                    plan = online.plan_resize(
+                        sr.stage.name, sr.pending_chunks(), n_workers,
+                        resizes_done=sr.resizes)
+                    if plan:
+                        remaining_total += sr.resize_remaining(plan)
 
         def worker(wid: int) -> None:
             """Pool thread: rotate over stages, pop runnable chunks, execute."""
@@ -437,6 +525,15 @@ class PipelineExecutor:
         if errors:
             raise errors[0]
         wall = time.perf_counter() - t0_run
+        if online is not None:
+            for name, ch in choices.items():
+                sr = runs[name]
+                span = ((sr.t_last - sr.t_first)
+                        if sr.t_first is not None else 0.0)
+                # per-ROW span: rewards stay comparable when the same
+                # scheduler serves differently-sized runs of a stage
+                rows = max(1, sr.stage.n_rows)
+                online.observe(ch, (span if span > 0 else wall) / rows)
 
         stage_results = {
             name: StageResult(value=sr.value, schedule=sr.schedule,

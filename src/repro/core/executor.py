@@ -16,6 +16,7 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+from .online import ChunkObservation
 from .partitioners import make_partitioner
 from .queues import CentralizedQueue, DistributedQueues
 from .task import RangeTask
@@ -62,12 +63,24 @@ class ExecutionStats:
 
 
 class ScheduledExecutor:
-    """Execute a task list under a SchedulerConfig; collect results + stats."""
+    """Execute a task list under a SchedulerConfig; collect results + stats.
 
-    def __init__(self, config: SchedulerConfig):
+    ``observer`` hooks the worker record path into the online feedback
+    loop (core/online.py): any object with a ``record(ChunkObservation)``
+    method — an OnlineScheduler or a bare FeedbackLog — or a callable
+    taking a ChunkObservation receives every completed task's measured
+    cost as it lands. ``observer_stage`` names the stage in those
+    observations (flat batches have no DAG stage of their own).
+    """
+
+    def __init__(self, config: SchedulerConfig, observer=None,
+                 observer_stage: str = "flat"):
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
+        self._observe = (observer.record if hasattr(observer, "record")
+                         else observer)
+        self._observer_stage = observer_stage
 
     def run(self, tasks: list[RangeTask]) -> tuple[dict[int, object], ExecutionStats]:
         """Run ``tasks`` to completion; returns ({task_id: value}, stats)."""
@@ -83,11 +96,16 @@ class ScheduledExecutor:
             """Run one task and fold its result/stats in (worker thread)."""
             t0 = time.perf_counter()
             value = task.run()
-            dt = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            dt = t1 - t0
             with res_lock:
                 results[task.task_id] = value
                 stats.per_worker_tasks[worker_id] += 1
                 stats.per_worker_busy_s[worker_id] += dt
+                if self._observe is not None:
+                    self._observe(ChunkObservation(
+                        self._observer_stage, task.task_id, task.start,
+                        task.size, dt, worker_id, t1 - t_start))
 
         t_start = time.perf_counter()
         if cfg.queue_layout.upper() == "CENTRALIZED":

@@ -45,6 +45,7 @@ from typing import Any
 import numpy as np
 
 from .dag import (
+    DEP_FULL,
     PipelineDAG,
     _resolve_stage_config,
     _stage_inputs,
@@ -52,6 +53,7 @@ from .dag import (
     _try_pop,
 )
 from .executor import SchedulerConfig
+from .online import ChunkObservation
 
 __all__ = [
     "Job", "JobState", "JobResult", "ServerResult", "ServerTaskEvent",
@@ -318,16 +320,28 @@ class PipelineServer:
     ``serve(jobs)`` blocks until every job drains and returns a
     ServerResult. Job ``arrival_s`` offsets are honoured in real time:
     workers never touch a job before it arrives.
+
+    ``online`` (a core.online.OnlineScheduler) closes the feedback loop
+    across jobs: each job's stage runs are built *lazily*, in topological
+    order, the first time the stage could have a runnable chunk — and the
+    build re-consults the stage's bandit right then, so chunk times
+    observed from earlier jobs (and earlier stages of this job) retune the
+    configs later stages play. Explicit ``Job.per_stage`` / ``Stage.config``
+    entries stay authoritative; completed chunks stream into the online
+    feedback log and stage remainders resize mid-run exactly as in
+    PipelineExecutor.
     """
 
     def __init__(self, config: SchedulerConfig,
                  arbiter: str | Arbiter = "fair",
-                 arbiter_kwargs: dict | None = None):
+                 arbiter_kwargs: dict | None = None,
+                 online=None):
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
         self._arbiter_spec = arbiter
         self._arbiter_kwargs = dict(arbiter_kwargs or {})
+        self._online = online
 
     def serve(self, jobs: list[Job]) -> ServerResult:
         """Admit ``jobs`` and run the pool until every job completes."""
@@ -335,26 +349,20 @@ class PipelineServer:
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate job names in {names}")
         arbiter = make_arbiter(self._arbiter_spec, **self._arbiter_kwargs)
+        online = self._online
         states = [JobState(job=j, seq=i, arrival=float(j.arrival_s))
                   for i, j in enumerate(jobs)]
         runs: dict[str, dict[str, _StageRun]] = {}
         stage_order: dict[str, list[_StageRun]] = {}
         job_left: dict[str, int] = {}
-        for j in jobs:
-            per = dict(j.per_stage or {})
-            jr = {name: _StageRun(
-                j.dag.stages[name],
-                _resolve_stage_config(self.config, j.dag.stages[name],
-                                      per.get(name)),
-                self._domains)
-                for name in j.dag.order}
-            runs[j.name] = jr
-            stage_order[j.name] = [jr[n] for n in j.dag.order]
-            job_left[j.name] = sum(sr.remaining for sr in jr.values())
+        job_unbuilt: dict[str, int] = {}
+        per_job = {j.name: dict(j.per_stage or {}) for j in jobs}
+        choices: dict[tuple[str, str], object] = {}
 
         n_workers = self.config.n_workers
         cond = threading.Condition()
-        total_left = [sum(job_left.values())]  # cell: workers decrement it
+        total_left = [0]    # outstanding tasks in BUILT stage runs
+        unbuilt = [0]       # stage runs not built yet (lazy/online mode)
         events: list[ServerTaskEvent] = []
         errors: list[BaseException] = []
         busy = [0.0] * n_workers
@@ -363,11 +371,83 @@ class PipelineServer:
         job_end = {j.name: 0.0 for j in jobs}
         steals = [0]
         cursors: dict[tuple[int, int], int] = {}
+
+        def build_stage(job: Job, name: str) -> _StageRun:
+            """Materialize one stage run (lock held in lazy mode).
+
+            In online mode this is where the arbiter-driven drain
+            re-consults the selector: the bandit picks the stage's combo
+            with all feedback observed so far, unless the job or stage
+            pins an explicit config.
+            """
+            stage = job.dag.stages[name]
+            override = per_job[job.name].get(name)
+            if online is not None and override is None and stage.config is None:
+                ch = online.suggest(name)
+                choices[(job.name, name)] = ch
+                override = ch.combo
+            sr = _StageRun(stage,
+                           _resolve_stage_config(self.config, stage, override),
+                           self._domains)
+            runs[job.name][name] = sr
+            stage_order[job.name].append(sr)
+            job_unbuilt[job.name] -= 1
+            unbuilt[0] -= 1
+            job_left[job.name] += sr.remaining
+            total_left[0] += sr.remaining
+            return sr
+
+        def buildable(js: JobState, idx: int) -> bool:
+            """May stage #idx (topo order) of this job be built yet?
+
+            Build when the stage could plausibly have a runnable head
+            chunk: full-dep producers finished, elementwise producers have
+            produced at least one chunk. Building in topological order
+            guarantees every producer run already exists.
+            """
+            stage = js.job.dag.stages[js.job.dag.order[idx]]
+            jruns = runs[js.job.name]
+            for d in stage.deps:
+                p = jruns[d.producer]
+                if d.kind == DEP_FULL:
+                    if not p.done:
+                        return False
+                elif p.stage.n_rows > 0 and p.t_first is None and not p.done:
+                    return False
+            return True
+
+        lazy = online is not None
+        for j in jobs:
+            runs[j.name] = {}
+            stage_order[j.name] = []
+            job_left[j.name] = 0
+            job_unbuilt[j.name] = len(j.dag.order)
+            unbuilt[0] += len(j.dag.order)
+            if not lazy:
+                for name in j.dag.order:
+                    build_stage(j, name)
         t0_run = time.perf_counter()
+
+        def finish_job(js: JobState, finish: float) -> None:
+            """Mark a drained job done; credit its bandit choices (lock held)."""
+            js.done = True
+            js.finish = finish
+            if online is not None:
+                for sr in stage_order[js.job.name]:
+                    ch = choices.pop((js.job.name, sr.stage.name), None)
+                    if ch is not None:
+                        span = ((sr.t_last - sr.t_first)
+                                if sr.t_first is not None else 0.0)
+                        # per-ROW span: a 10x-larger job must not make its
+                        # arm look 10x worse than one played on a small job
+                        rows = max(1, sr.stage.n_rows)
+                        online.observe(ch, (span if span > 0
+                                            else max(finish - js.arrival,
+                                                     0.0)) / rows)
 
         # jobs with no work at all complete the moment they arrive
         for js in states:
-            if job_left[js.job.name] == 0:
+            if job_left[js.job.name] == 0 and job_unbuilt[js.job.name] == 0:
                 js.done, js.finish = True, js.arrival
 
         def pick(wid: int, t: float):
@@ -380,7 +460,22 @@ class PipelineServer:
             for js in arbiter.order(admitted, t):
                 jname = js.job.name
                 jruns = stage_order[jname]
+                if lazy:
+                    # extend this job's built prefix while its next stage
+                    # is reachable — each build re-consults the selector
+                    while (job_unbuilt[jname] > 0
+                           and buildable(js, len(jruns))):
+                        build_stage(js.job, js.job.dag.order[len(jruns)])
+                    if job_unbuilt[jname] == 0 and job_left[jname] == 0 \
+                            and not js.done:
+                        # every stage built and drained (e.g. all-empty
+                        # stages): complete the job here — no record path
+                        # will ever fire for it
+                        finish_job(js, max(job_end[jname], js.arrival))
+                        continue
                 ns = len(jruns)
+                if ns == 0:
+                    continue
                 cur = cursors.get((wid, js.seq), wid % ns)
                 for k in range(ns):
                     idx = (cur + k) % ns
@@ -399,7 +494,8 @@ class PipelineServer:
                 choice = None
                 with cond:
                     while True:
-                        if errors or total_left[0] == 0:
+                        if errors or (total_left[0] == 0
+                                      and unbuilt[0] == 0):
                             return
                         t = time.perf_counter() - t0_run
                         choice = pick(wid, t)
@@ -423,9 +519,22 @@ class PipelineServer:
                                      job_tasks, job_end, steals)
                         job_left[js.job.name] -= 1
                         total_left[0] -= 1
-                        if job_left[js.job.name] == 0:
-                            js.done = True
-                            js.finish = job_end[js.job.name]
+                        if online is not None:
+                            online.record(ChunkObservation(
+                                sr.stage.name, task[0], task[1], task[2],
+                                t1 - t0, wid, t1 - t0_run))
+                            if not sr.done and online.may_resize(
+                                    sr.stage.name, sr.resizes):
+                                plan = online.plan_resize(
+                                    sr.stage.name, sr.pending_chunks(),
+                                    n_workers, resizes_done=sr.resizes)
+                                if plan:
+                                    delta = sr.resize_remaining(plan)
+                                    job_left[js.job.name] += delta
+                                    total_left[0] += delta
+                        if (job_left[js.job.name] == 0
+                                and job_unbuilt[js.job.name] == 0):
+                            finish_job(js, job_end[js.job.name])
                         cond.notify_all()
                 except BaseException as e:  # surfaced to the caller below
                     with cond:

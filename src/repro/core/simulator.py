@@ -33,6 +33,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .device_schedule import DeviceDagTables, build_dag_tables
+from .online import ChunkObservation
 from .partitioners import chunk_schedule, make_partitioner
 from .victim import make_victim_selector
 
@@ -261,7 +262,8 @@ class _SimStage:
     """Virtual-time state of one DAG stage."""
 
     __slots__ = ("name", "deps", "chunks", "chunk_cost", "ptr", "row_time",
-                 "layout", "queue", "start", "finish", "max_end", "last_end")
+                 "layout", "queue", "start", "finish", "max_end", "last_end",
+                 "resizes")
 
     def __init__(self, name, deps, schedule, costs, layout):
         self.name = name
@@ -276,6 +278,7 @@ class _SimStage:
         self.finish = math.inf
         self.max_end = 0.0                    # latest chunk completion so far
         self.last_end: dict[int, int] = {}    # per-worker locality tracking
+        self.resizes = 0                      # moldable interventions (budget)
 
 
 def _combo_of(cfg) -> tuple[str, str, str]:
@@ -401,6 +404,7 @@ def simulate_dag(
     frozen: DeviceDagTables | bool | None = None,
     tile: int = 1,
     n_shards: int | None = None,
+    online=None,
 ) -> DagSimResult:
     """Simulate a PipelineDAG run on ``n_workers`` shared workers.
 
@@ -426,6 +430,14 @@ def simulate_dag(
     bare technique strings — over ``n_shards`` shards, row tiles of
     ``tile``) and predict the fused-launch makespan of the Pallas walker
     instead of the host pool's.
+
+    ``online`` (a core.online.OnlineScheduler) replays the runtime
+    feedback loop in virtual time: every popped chunk is recorded as a
+    ChunkObservation (virtual cost/clock), and the moldable resizer may
+    re-chunk a stage's unpopped remainder mid-replay exactly as the real
+    pool would — so selector/resizer convergence is testable
+    deterministically. Not supported on the frozen device path (device
+    tables are immutable by construction).
     """
     names = dag.stage_names
     if stage_costs is None:
@@ -436,6 +448,9 @@ def simulate_dag(
         stage_configs = {n: stage_configs for n in names}
 
     if frozen is not None and frozen is not False:
+        if online is not None:
+            raise ValueError("online replay is host-pool only: frozen device "
+                             "tables cannot be resized mid-run")
         row_costs = _resolve_row_costs(dag, stage_costs)
         if isinstance(frozen, DeviceDagTables):
             ddt = frozen
@@ -506,12 +521,28 @@ def simulate_dag(
             continue
         idx, st = taken
         cursor[w] = (idx + 1) % nstages
-        _, _, _, cost, _, t_end, wait = _pop_chunk(st, w, t, ov)
+        tid, s0, z0, cost, _, t_end, wait = _pop_chunk(st, w, t, ov)
         queue_wait += wait
         busy[w] += cost
         last_completion = max(last_completion, t_end)
         remaining -= 1
         heapq.heappush(heap, (t_end, w))
+        if online is not None:
+            online.record(ChunkObservation(st.name, tid, s0, z0, cost, w, t_end))
+            if st.ptr < len(st.chunks) and online.may_resize(st.name,
+                                                             st.resizes):
+                plan = online.plan_resize(
+                    st.name, st.chunks[st.ptr:], n_workers,
+                    resizes_done=st.resizes)
+                if plan:
+                    rc = row_costs[st.name]
+                    old = len(st.chunks) - st.ptr
+                    st.chunks = st.chunks[:st.ptr] + [
+                        (int(ps), int(pz)) for ps, pz in plan]
+                    st.chunk_cost = st.chunk_cost[:st.ptr] + [
+                        float(rc[ps:ps + pz].sum()) for ps, pz in plan]
+                    st.resizes += 1
+                    remaining += len(plan) - old
         # a take advances a FIFO head (and row fills become visible as the
         # clock reaches their t_end): re-scan parked workers now
         if pending:

@@ -9,11 +9,13 @@ from .apps import (
     linear_regression,
     linear_regression_dag,
     linear_regression_device,
+    linear_regression_online,
     linreg_dag,
     linreg_device_lowering,
     recommendation_dag,
     recommendation_device,
     recommendation_device_lowering,
+    recommendation_online,
     recommendation_oracle,
     recommendation_pipeline,
     run_device_dag,
@@ -27,6 +29,7 @@ __all__ = [
     "cc_iteration_dag", "connected_components_dag", "linreg_dag",
     "linear_regression_dag", "recommendation_dag",
     "recommendation_pipeline", "recommendation_oracle",
+    "linear_regression_online", "recommendation_online",
     "DeviceLowering", "run_device_dag", "linreg_device_lowering",
     "linear_regression_device", "recommendation_device_lowering",
     "recommendation_device",

@@ -41,6 +41,7 @@ __all__ = [
     "cc_iteration_dag", "connected_components_dag", "linreg_dag",
     "linear_regression_dag", "recommendation_dag",
     "recommendation_pipeline", "recommendation_oracle",
+    "linear_regression_online", "recommendation_online",
     "DeviceLowering", "run_device_dag", "linreg_device_lowering",
     "linear_regression_device", "recommendation_device_lowering",
     "recommendation_device",
@@ -259,6 +260,71 @@ def linear_regression_dag(
     dag, finalize = linreg_dag(num_rows, num_cols, lam=lam, seed=seed)
     res = PipelineExecutor(dag, config, per_stage).run()
     return finalize(res.values), res
+
+
+def _make_online(online, selector: str, seed: int):
+    """Default OnlineScheduler for real-pool loops (SS excluded: chunk=1
+    over thousands of rows swamps a thread pool with task dust)."""
+    if online is not None:
+        return online
+    from ..core.online import OnlineScheduler, default_online_arms
+    return OnlineScheduler(selector=selector,
+                           arms=default_online_arms(include_ss=False),
+                           seed=seed)
+
+
+def linear_regression_online(
+    num_rows: int,
+    num_cols: int,
+    config: SchedulerConfig,
+    rounds: int = 3,
+    online=None,
+    selector: str = "ucb",
+    lam: float = 0.001,
+    seed: int = 1,
+) -> tuple[np.ndarray, list[DagResult], object]:
+    """Paper Listing 2 served repeatedly under the online feedback loop.
+
+    Each round replays the linreg DAG on a real PipelineExecutor pool with
+    the same core.online.OnlineScheduler: the per-stage bandits pick the
+    round's configs, measured chunk times stream back, and stage
+    remainders resize mid-run — the closed-loop counterpart of passing a
+    ``select_offline_dag`` assignment in ``per_stage``. Returns
+    (beta from the final round, per-round DagResults, the trained
+    scheduler — reusable across calls to keep learning).
+    """
+    online = _make_online(online, selector, seed)
+    dag, finalize = linreg_dag(num_rows, num_cols, lam=lam, seed=seed)
+    history: list[DagResult] = []
+    for _ in range(max(1, rounds)):
+        res = PipelineExecutor(dag, config, online=online).run()
+        history.append(res)
+    return finalize(history[-1].values), history, online
+
+
+def recommendation_online(
+    n_users: int,
+    n_items: int,
+    config: SchedulerConfig,
+    rounds: int = 3,
+    online=None,
+    selector: str = "ucb",
+    density: float = 0.3,
+    seed: int = 0,
+) -> tuple[np.ndarray, list[DagResult], object]:
+    """The recommendation DAG served repeatedly under the feedback loop.
+
+    Same closed loop as ``linear_regression_online`` over the two-branch
+    recommendation pipeline. Returns (final top items, per-round
+    DagResults, the trained OnlineScheduler).
+    """
+    online = _make_online(online, selector, seed)
+    dag = recommendation_dag(n_users, n_items, density=density, seed=seed)
+    history: list[DagResult] = []
+    for _ in range(max(1, rounds)):
+        res = PipelineExecutor(dag, config, online=online).run()
+        history.append(res)
+    return history[-1].values["scores"], history, online
 
 
 def recommendation_dag(

@@ -1,0 +1,192 @@
+"""The CI gate checker itself: absent/malformed rows must fail loudly,
+and the bench-history baseline mode must catch regressions and renames."""
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_path = pathlib.Path(__file__).resolve().parents[1] / "benchmarks" / "check_gates.py"
+_spec = importlib.util.spec_from_file_location("check_gates", _path)
+cg = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cg)
+
+GOOD_ROWS = {
+    "pipeline_dag_cc_regression": (768.7, "baseline=836us gain=8.06%"),
+    "device_dag_linreg": (247164.1, "equal=1 sim_gain=14.04%"),
+    "pipeline_server_mixed_load": (14852.2, "p99_gain=38.94%"),
+    "online_linreg_adaptive": (92.2, "offline=92.2us margin110=10.00% vs_median=64.09%"),
+    "online_resize_merge": (106.5, "static=10240us resizes=1 resize_gain=98.96%"),
+}
+
+
+def write_csv(tmp_path, rows, extra_lines=()):
+    p = tmp_path / "bench.csv"
+    lines = ["name,us_per_call,derived"]
+    lines += [f"{n},{us:.3f},{d}" for n, (us, d) in rows.items()]
+    lines += list(extra_lines)
+    p.write_text("\n".join(lines) + "\n")
+    return str(p)
+
+
+def test_all_gates_pass(tmp_path):
+    assert cg.main([write_csv(tmp_path, GOOD_ROWS)]) == 0
+
+
+@pytest.mark.parametrize("dropped", sorted(cg.GATES))
+def test_absent_gated_row_fails_loudly(tmp_path, dropped, capsys):
+    """A renamed or dropped CI-gated row must not silently pass."""
+    rows = {n: v for n, v in GOOD_ROWS.items() if n != dropped}
+    assert cg.main([write_csv(tmp_path, rows)]) == 1
+    assert f"GATE MISSING: no `{dropped}` row" in capsys.readouterr().out
+
+
+def test_negative_gate_value_fails(tmp_path):
+    rows = dict(GOOD_ROWS)
+    rows["pipeline_dag_cc_regression"] = (768.7, "gain=-0.50%")
+    assert cg.main([write_csv(tmp_path, rows)]) == 1
+
+
+def test_pattern_missing_from_derived_fails(tmp_path):
+    rows = dict(GOOD_ROWS)
+    rows["online_linreg_adaptive"] = (92.2, "margin110=10.00%")  # vs_median gone
+    assert cg.main([write_csv(tmp_path, rows)]) == 1
+
+
+def test_malformed_line_fails_loudly(tmp_path, capsys):
+    path = write_csv(tmp_path, GOOD_ROWS, extra_lines=["truncated_row_no_commas"])
+    assert cg.main([path]) == 1
+    assert "MALFORMED ROW" in capsys.readouterr().out
+
+
+def test_non_numeric_value_fails(tmp_path):
+    path = write_csv(tmp_path, GOOD_ROWS, extra_lines=["bad_row,notafloat,x"])
+    assert cg.main([path]) == 1
+
+
+def test_missing_csv_fails(tmp_path, capsys):
+    assert cg.main([str(tmp_path / "nope.csv")]) == 1
+    assert "BENCH CSV MISSING" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# bench-history baseline mode
+# ---------------------------------------------------------------------------
+
+def write_baseline(tmp_path, rows, default_tolerance=9.0):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps(
+        {"default_tolerance": default_tolerance, "rows": rows}))
+    return str(p)
+
+
+def full_baseline_rows(**overrides):
+    rows = {n: {"us_per_call": us, "tolerance": 0.05}
+            for n, (us, _d) in GOOD_ROWS.items()}
+    rows.update(overrides)
+    return rows
+
+
+def test_baseline_within_tolerance_passes(tmp_path):
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    base = write_baseline(tmp_path, full_baseline_rows(
+        online_linreg_adaptive={"us_per_call": 90.0, "tolerance": 0.05}))
+    assert cg.main([csv, "--against-baseline", base]) == 0
+
+
+def test_new_row_without_history_fails(tmp_path, capsys):
+    """A freshly added bench row must enter the baseline in the same PR."""
+    rows = dict(GOOD_ROWS)
+    rows["online_brand_new_row"] = (5.0, "shiny")
+    csv = write_csv(tmp_path, rows)
+    base = write_baseline(tmp_path, full_baseline_rows())
+    assert cg.main([csv, "--against-baseline", base]) == 1
+    assert "ROW NOT IN BASELINE" in capsys.readouterr().out
+
+
+def test_baseline_regression_fails(tmp_path, capsys):
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    base = write_baseline(tmp_path, full_baseline_rows(
+        online_linreg_adaptive={"us_per_call": 80.0, "tolerance": 0.02}))
+    assert cg.main([csv, "--against-baseline", base]) == 1
+    assert "regressed" in capsys.readouterr().out
+
+
+def test_baseline_row_absent_from_csv_fails(tmp_path, capsys):
+    """A row accepted into the baseline that disappears from the bench run
+    (rename/drop) must fail the history gate, not silently pass."""
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    base = write_baseline(tmp_path, {
+        "row_that_was_renamed": {"us_per_call": 1.0, "tolerance": 0.5}})
+    assert cg.main([csv, "--against-baseline", base]) == 1
+    assert "BASELINE ROW MISSING" in capsys.readouterr().out
+
+
+def test_baseline_missing_file_fails(tmp_path):
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    assert cg.main([csv, "--against-baseline",
+                    str(tmp_path / "nope.json")]) == 1
+
+
+def test_update_baseline_roundtrip_preserves_tolerances(tmp_path):
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps({"default_tolerance": 9.0, "rows": {
+        "online_linreg_adaptive": {"us_per_call": 50.0, "tolerance": 0.33}}}))
+    assert cg.main([csv, "--update-baseline", str(base)]) == 0
+    data = json.loads(base.read_text())
+    assert set(data["rows"]) == set(GOOD_ROWS)
+    # hand-edited tolerance preserved across re-acceptance
+    assert data["rows"]["online_linreg_adaptive"]["tolerance"] == 0.33
+    # new values accepted
+    assert data["rows"]["online_linreg_adaptive"]["us_per_call"] == pytest.approx(92.2)
+    # deterministic rows get the tight default, wall-clock rows the wide one
+    assert data["rows"]["pipeline_server_mixed_load"]["tolerance"] == \
+        cg.DETERMINISTIC_TOLERANCE
+    assert data["rows"]["device_dag_linreg"]["tolerance"] == cg.DEFAULT_TOLERANCE
+    # the accepted file must pass its own gate
+    assert cg.main([csv, "--against-baseline", str(base)]) == 0
+
+
+def test_update_baseline_refuses_failing_invariants(tmp_path, capsys):
+    """A run that fails its own gates must not become the accepted history."""
+    rows = dict(GOOD_ROWS)
+    rows["online_linreg_adaptive"] = (200.0, "margin110=-3.00% vs_median=1.00%")
+    csv = write_csv(tmp_path, rows)
+    base = tmp_path / "baseline.json"
+    assert cg.main([csv, "--update-baseline", str(base)]) == 1
+    assert not base.exists()
+    assert "refusing to accept" in capsys.readouterr().out
+
+
+def test_baseline_mode_mismatch_fails(tmp_path, capsys):
+    """A baseline accepted from a full run must not gate a quick run."""
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    (tmp_path / "bench_meta.json").write_text(
+        json.dumps({"run_id": "x", "mode": "quick"}))
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps({"mode": "full", "rows": {
+        "online_linreg_adaptive": {"us_per_call": 92.2, "tolerance": 0.5}}}))
+    assert cg.main([csv, "--against-baseline", str(base)]) == 1
+    assert "BASELINE MODE MISMATCH" in capsys.readouterr().out
+
+
+def test_update_baseline_records_mode(tmp_path):
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    (tmp_path / "bench_meta.json").write_text(
+        json.dumps({"run_id": "x", "mode": "quick"}))
+    base = tmp_path / "baseline.json"
+    assert cg.main([csv, "--update-baseline", str(base)]) == 0
+    assert json.loads(base.read_text())["mode"] == "quick"
+    # matching mode passes the gate
+    assert cg.main([csv, "--against-baseline", str(base)]) == 0
+
+
+def test_committed_baseline_tracks_quick_gate_rows():
+    """The committed baseline must cover every invariant-gated row, so a
+    gated row can't be dropped without touching benchmarks/baseline.json."""
+    committed = pathlib.Path(_path).with_name("baseline.json")
+    data = json.loads(committed.read_text())
+    for name in cg.GATES:
+        assert name in data["rows"], f"gated row {name!r} not in baseline.json"
