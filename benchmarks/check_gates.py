@@ -25,6 +25,13 @@ row must never silently pass:
                                 (vs_median >= 0)
   online_resize_merge           moldable resizing never loses to leaving
                                 SS chunk dust in place (resize_gain >= 0)
+  hetero_linreg_placement       real host+device co-execution is bit-equal
+                                to the host-only executor (equal=1), the
+                                placement solver never loses to
+                                min(all-HOST, all-DEVICE) (vs_best >= 0),
+                                and its mixed placement beats both
+                                homogeneous runs on the transfer-heavy
+                                synthetic DAG (mixed_gain >= 0)
 
 Baseline mode (``--against-baseline``) is the bench-history regression
 gate: ``benchmarks/baseline.json`` holds the last ACCEPTED us_per_call per
@@ -35,6 +42,14 @@ yet (new rows must enter the baseline in the PR that introduces them). Simulated
 tolerances; wall-clock rows get wide ones (shared CI runners jitter).
 Re-accept new numbers with ``--update-baseline`` (it preserves hand-edited
 tolerances).
+
+Substrate provenance: ``benchmarks/run.py`` stamps the machine's jax
+backend, device kind, and host core count into ``bench_meta.json`` (and
+every BENCH_<run>.json). ``--update-baseline`` records the stamp; a later
+``--against-baseline`` run whose stamp DIFFERS on any of those keys fails
+loudly — accepted numbers must never silently gate a different machine.
+Baselines accepted before the stamp existed (no "substrate" block) skip
+the check.
 """
 
 from __future__ import annotations
@@ -51,13 +66,20 @@ GATES: dict[str, tuple[str, ...]] = {
     "pipeline_server_mixed_load": (r"p99_gain=(-?[\d.]+)%",),
     "online_linreg_adaptive": (r"margin110=(-?[\d.]+)%", r"vs_median=(-?[\d.]+)%"),
     "online_resize_merge": (r"resize_gain=(-?[\d.]+)%",),
+    "hetero_linreg_placement": (r"equal=(-?[\d.]+)", r"vs_best=(-?[\d.]+)%",
+                                r"mixed_gain=(-?[\d.]+)%"),
 }
 TOLERANCE = -1e-6  # simulator determinism should make these exact
 
 # rows whose us_per_call comes from the deterministic virtual-time
 # simulator: byte-stable across runs, so the baseline gate holds them tight.
 DETERMINISTIC_PREFIXES = ("pipeline_dag_cc_regression",
-                          "pipeline_server_mixed_load", "online_")
+                          "pipeline_server_mixed_load", "online_",
+                          "hetero_")
+
+# provenance keys that must match between the accepted baseline and the
+# current run: numbers from one machine must not gate another one.
+SUBSTRATE_KEYS = ("jax_backend", "device_kind", "host_cpu_count")
 DETERMINISTIC_TOLERANCE = 0.02
 # wall-clock rows jitter on shared CI runners; the wide default still
 # catches order-of-magnitude regressions (a lost GIL release, an O(n^2)
@@ -118,23 +140,29 @@ def check_invariants(rows: dict[str, tuple[float, str]], path: str) -> int:
     return failures
 
 
-def read_mode(csv_path: str) -> str | None:
-    """The quick/full provenance of a bench CSV (from bench_meta.json).
+def read_meta(csv_path: str) -> dict:
+    """The provenance marker next to a bench CSV (bench_meta.json).
 
     ``benchmarks/run.py`` drops the marker next to the CSV; a hand-built
-    CSV (tests) has none, which disables the mode cross-check.
+    CSV (tests) has none, which disables the mode/substrate cross-checks.
     """
     meta = Path(csv_path).parent / "bench_meta.json"
     if not meta.exists():
-        return None
+        return {}
     try:
-        return json.loads(meta.read_text()).get("mode")
+        return json.loads(meta.read_text())
     except (ValueError, OSError):
-        return None
+        return {}
+
+
+def read_mode(csv_path: str) -> str | None:
+    """The quick/full provenance of a bench CSV (from bench_meta.json)."""
+    return read_meta(csv_path).get("mode")
 
 
 def check_baseline(rows: dict[str, tuple[float, str]], baseline_path: str,
-                   mode: str | None = None) -> int:
+                   mode: str | None = None,
+                   substrate: dict | None = None) -> int:
     """Compare current rows against the accepted bench history; count fails."""
     p = Path(baseline_path)
     if not p.exists():
@@ -147,6 +175,16 @@ def check_baseline(rows: dict[str, tuple[float, str]], baseline_path: str,
               f"{accepted_mode!r} run but this is a {mode!r} run — "
               f"re-accept with --update-baseline from a matching run")
         return 1
+    accepted_sub = data.get("substrate")
+    if substrate and accepted_sub:
+        for key in SUBSTRATE_KEYS:
+            got, want = substrate.get(key), accepted_sub.get(key)
+            if want is not None and got != want:
+                print(f"BASELINE SUBSTRATE MISMATCH: {key}={got!r} but the "
+                      f"baseline was accepted on {key}={want!r} — numbers "
+                      f"from one machine must not gate another; re-accept "
+                      f"with --update-baseline on this substrate")
+                return 1
     default_tol = float(data.get("default_tolerance", DEFAULT_TOLERANCE))
     failures = 0
     for name, spec in sorted(data.get("rows", {}).items()):
@@ -186,7 +224,8 @@ def default_tolerance_for(name: str) -> float:
 
 
 def update_baseline(rows: dict[str, tuple[float, str]], baseline_path: str,
-                    mode: str | None = None) -> int:
+                    mode: str | None = None,
+                    substrate: dict | None = None) -> int:
     """Accept the current rows as the new baseline (tolerances preserved)."""
     p = Path(baseline_path)
     old = json.loads(p.read_text()) if p.exists() else {}
@@ -195,6 +234,9 @@ def update_baseline(rows: dict[str, tuple[float, str]], baseline_path: str,
         "default_tolerance": old.get("default_tolerance", DEFAULT_TOLERANCE),
         **({"mode": mode} if mode else
            {"mode": old["mode"]} if old.get("mode") else {}),
+        **({"substrate": {k: substrate.get(k) for k in SUBSTRATE_KEYS}}
+           if substrate else
+           {"substrate": old["substrate"]} if old.get("substrate") else {}),
         "rows": {
             name: {
                 "us_per_call": round(us, 3),
@@ -219,17 +261,21 @@ def main(argv: list[str] | None = None) -> int:
                     help="accept the current rows as the new baseline")
     args = ap.parse_args(argv)
     rows, failures = read_rows(args.csv)
-    mode = read_mode(args.csv)
+    meta = read_meta(args.csv)
+    mode = meta.get("mode")
+    substrate = meta.get("substrate")
     if args.update_baseline:
         # a run that fails its own invariant gates must never be
         # institutionalized as the accepted history
         if failures or check_invariants(rows, args.csv):
             print("refusing to accept a CSV that fails the invariant gates")
             return 1
-        return update_baseline(rows, args.update_baseline, mode=mode)
+        return update_baseline(rows, args.update_baseline, mode=mode,
+                               substrate=substrate)
     failures += check_invariants(rows, args.csv)
     if args.against_baseline:
-        failures += check_baseline(rows, args.against_baseline, mode=mode)
+        failures += check_baseline(rows, args.against_baseline, mode=mode,
+                                   substrate=substrate)
     return 1 if failures else 0
 
 

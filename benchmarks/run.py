@@ -16,6 +16,9 @@ the JSON is uploaded as a CI artifact).
   online_*           §12 runtime feedback loop: bandit-tuned makespan vs the
                      offline search and the static techniques; moldable
                      chunk-resize rescue of a mis-chunked stage
+  hetero_*           §13 heterogeneous placement: the transfer-aware solver
+                     vs the all-HOST / all-DEVICE baselines, plus real
+                     host+device co-execution bit-equality
   cc_vee_*           the paper's CC hot loop on the real VEE
   schedule_quality_* device-side assignment quality (LPT vs round-robin)
   roofline_*         summary of artifacts/roofline.json (dry-run derived)
@@ -45,6 +48,32 @@ from repro.vee import rmat_graph  # noqa: E402
 
 ART = Path(__file__).resolve().parents[1] / "artifacts"
 ROWS: list[tuple[str, float, str]] = []
+
+
+def substrate_provenance() -> dict:
+    """Where these numbers came from: jax backend, device kind, host cores.
+
+    Stamped into every BENCH_<run>.json and bench_meta.json so baseline
+    comparisons across machines FAIL LOUDLY (check_gates.py refuses a
+    substrate mismatch) instead of silently drifting when a runner
+    generation, accelerator, or core count changes under the numbers.
+    """
+    import platform
+
+    info = {
+        "host_cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+    try:
+        import jax
+        info["jax_backend"] = jax.default_backend()
+        info["device_kind"] = jax.devices()[0].device_kind
+        info["n_devices"] = jax.device_count()
+    except Exception as e:  # bench rows that never touch jax still stamp
+        info["jax_backend"] = f"unavailable ({type(e).__name__})"
+        info["device_kind"] = "unknown"
+    return info
 
 
 def row(name: str, us: float, derived: str = "") -> None:
@@ -340,6 +369,55 @@ def bench_online(quick: bool = False) -> None:
         f"resize_gain={(static_ms - resized_ms) / static_ms * 100:.2f}%")
 
 
+def bench_hetero(quick: bool = False) -> None:
+    """Heterogeneous placement rows (§13): the transfer-aware solver vs the
+    homogeneous substrates, plus real co-execution bit-equality.
+
+    ``hetero_linreg_placement`` is the CI-gated row: ``equal=1`` asserts a
+    real HeteroExecutor run of the linreg lowering (host chunk workers +
+    a device walker lane, SPLIT placement) reproduces the host-only
+    PipelineExecutor bit-wise; ``vs_best`` asserts the solver's simulated
+    makespan never exceeds min(all-HOST, all-DEVICE) (it starts from the
+    better homogeneous placement and only accepts improvements); and
+    ``mixed_gain`` asserts the solved MIXED placement strictly beats BOTH
+    homogeneous placements on a transfer-heavy synthetic DAG whose
+    branches have opposite substrate affinities.
+    """
+    from repro.core import (HeteroExecutor, PipelineExecutor, Placement,
+                            SchedulerConfig, StagePlacement, select_placement)
+    from repro.vee.apps import hetero_affinity_dag, linreg_device_lowering
+
+    # real co-execution: linreg split across both substrates, bit-equal
+    low = linreg_device_lowering(512, 9, tile=64, seed=1)
+    host = PipelineExecutor(low.dag, SchedulerConfig(
+        technique="SS", n_workers=1)).run()
+    split = Placement({n: StagePlacement("split", 0.5)
+                       for n in low.dag.stage_names})
+    t0 = time.perf_counter()
+    het = HeteroExecutor(low.dag, SchedulerConfig(technique="SS",
+                                                  n_workers=2), split).run()
+    dt_real = time.perf_counter() - t0
+    equal = all(np.array_equal(np.asarray(host.values[k]),
+                               np.asarray(het.values[k]))
+                for k in host.values)
+
+    # transfer-heavy synthetic DAG with opposite per-branch affinities
+    # (shared with examples/hetero_pipeline.py and tests/test_placement.py)
+    dag, costs = hetero_affinity_dag(2048 if quick else 8192)
+    placement, het_ms, base = select_placement(dag, costs, n_workers=8,
+                                               passes=1 if quick else 2)
+    host_ms, dev_ms = base["host"], base["device"]
+    best = min(host_ms, dev_ms)
+    vs_best = (best - het_ms) / best * 100
+    mixed_gain = min((host_ms - het_ms) / host_ms,
+                     (dev_ms - het_ms) / dev_ms) * 100
+    row("hetero_linreg_placement", het_ms * 1e6,
+        f"equal={1 if equal else -1} wall_coexec={dt_real * 1e6:.1f}us "
+        f"host={host_ms * 1e6:.1f}us device={dev_ms * 1e6:.1f}us "
+        f"placement=[{placement.describe()}] "
+        f"vs_best={vs_best:.2f}% mixed_gain={mixed_gain:.2f}%")
+
+
 def paper_figures() -> None:
     import paper_repro
     claims = paper_repro.main(scale=16)
@@ -370,6 +448,7 @@ def main(quick: bool = False, run_id: str | None = None) -> None:
     bench_device_dag(quick=quick)
     bench_pipeline_server(quick=quick)
     bench_online(quick=quick)
+    bench_hetero(quick=quick)
     if not quick:
         bench_cc_vee()
         bench_schedule_quality()
@@ -388,12 +467,16 @@ def main(quick: bool = False, run_id: str | None = None) -> None:
     rid = run_id or os.environ.get("GITHUB_RUN_ID") \
         or time.strftime("local-%Y%m%d-%H%M%S")
     rid = re.sub(r"[^A-Za-z0-9._-]", "_", str(rid))
+    substrate = substrate_provenance()
     (ART / f"BENCH_{rid}.json").write_text(json.dumps(
-        {"run_id": rid, "quick": quick, "rows": payload}, indent=2) + "\n")
+        {"run_id": rid, "quick": quick, "substrate": substrate,
+         "rows": payload}, indent=2) + "\n")
     # provenance marker read by check_gates.py: baselines accepted from a
-    # full run must not gate quick CI runs (different row sets and sizes)
+    # full run must not gate quick CI runs (different row sets and sizes),
+    # and numbers accepted on one substrate must not gate another machine
     (ART / "bench_meta.json").write_text(json.dumps(
-        {"run_id": rid, "mode": "quick" if quick else "full"}) + "\n")
+        {"run_id": rid, "mode": "quick" if quick else "full",
+         "substrate": substrate}) + "\n")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,9 @@ technique-driven work stealing and 4 victim-selection strategies), plus the
 distributed coordinator, the TPU device-schedule adaptation, the
 auto-selection extension (the paper's stated future work), the pipeline-DAG
 runtime (DESIGN.md §9), the multi-tenant serving runtime (DESIGN.md §10),
-and the online adaptive-scheduling feedback loop (DESIGN.md §12).
+the online adaptive-scheduling feedback loop (DESIGN.md §12), and the
+heterogeneous placement & co-execution layer that splits pipeline DAGs
+across the host pool and the device walker (DESIGN.md §13).
 """
 
 from .autotune import (
@@ -17,8 +19,26 @@ from .autotune import (
     select_offline,
     select_offline_dag,
     select_offline_device_dag,
+    select_offline_hetero,
     select_offline_server,
     tune_online_dag,
+    tune_online_hetero,
+)
+from .hetero import HeteroExecutor, HeteroResult
+from .placement import (
+    DEVICE,
+    HOST,
+    SPLIT,
+    HeteroCostModel,
+    HeteroSimResult,
+    Placement,
+    StagePlacement,
+    TransferEvent,
+    TransferModel,
+    calibrate_hetero_costs,
+    replay_online_hetero,
+    select_placement,
+    simulate_hetero_dag,
 )
 from .coordinator import Coordinator, CoordinatorConfig, NodeSched
 from .dag import (
@@ -53,6 +73,7 @@ from .online import (
     OnlineScheduler,
     StageFeedback,
     UCB1Selector,
+    default_hetero_arms,
     default_online_arms,
     replay_online_dag,
 )
@@ -81,6 +102,7 @@ from .partitioners import (
 from .queues import QUEUE_LAYOUTS, CentralizedQueue, DistributedQueues
 from .simulator import (
     DagSimResult,
+    DagStats,
     ServerSimResult,
     SimOverheads,
     SimResult,
@@ -88,6 +110,7 @@ from .simulator import (
     simulate,
     simulate_dag,
     simulate_server,
+    stats_from_events,
 )
 from .task import RangeTask, tasks_from_schedule
 from .victim import VICTIM_STRATEGIES, VictimSelector, make_victim_selector
@@ -114,6 +137,12 @@ __all__ = [
     "select_offline_device_dag",
     "ChunkObservation", "StageFeedback", "FeedbackLog", "OnlineChoice",
     "OnlineRound", "OnlineScheduler", "UCB1Selector", "EXP3Selector",
-    "SELECTORS", "default_online_arms", "replay_online_dag",
-    "OnlineTuneResult", "tune_online_dag",
+    "SELECTORS", "default_online_arms", "default_hetero_arms",
+    "replay_online_dag", "OnlineTuneResult", "tune_online_dag",
+    "DagStats", "stats_from_events",
+    "HOST", "DEVICE", "SPLIT", "TransferModel", "HeteroCostModel",
+    "StagePlacement", "Placement", "TransferEvent", "HeteroSimResult",
+    "calibrate_hetero_costs", "simulate_hetero_dag", "select_placement",
+    "replay_online_hetero", "HeteroExecutor", "HeteroResult",
+    "select_offline_hetero", "tune_online_hetero",
 ]

@@ -34,7 +34,8 @@ from .victim import VICTIM_STRATEGIES
 
 __all__ = ["select_offline", "OnlineTuner", "default_search_space",
            "select_offline_dag", "DagTuner", "select_offline_server",
-           "select_offline_device_dag", "OnlineTuneResult", "tune_online_dag"]
+           "select_offline_device_dag", "OnlineTuneResult", "tune_online_dag",
+           "select_offline_hetero", "tune_online_hetero"]
 
 
 def default_search_space(include_ss: bool = False):
@@ -240,6 +241,89 @@ def select_offline_device_dag(
         if not improved:
             break
     return assign, best, uniform
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous placement selection (host pool + device walker, §13)
+# ---------------------------------------------------------------------------
+
+def select_offline_hetero(
+    dag,
+    costs,
+    n_workers: int = 20,
+    stage_configs: dict | tuple | None = None,
+    fractions: tuple[float, ...] = (0.25, 0.5, 0.75),
+    passes: int = 2,
+    overheads: SimOverheads = SimOverheads(),
+    seed: int = 0,
+):
+    """Offline substrate placement: the §13 counterpart of the dag/device
+    searches.
+
+    Thin entry point over ``core/placement.py:select_placement``: scores
+    the all-HOST and all-DEVICE baselines with ``simulate_hetero_dag``,
+    then coordinate-descends per stage over {HOST, DEVICE, SPLIT(f)}
+    accepting only improvements — so the returned placement is never
+    worse than min(host-only, device-only) by construction (the
+    ``hetero_linreg_placement`` CI gate). ``costs`` is a
+    ``HeteroCostModel`` (see ``calibrate_hetero_costs``) or a plain
+    per-row dict applied to both substrates. Returns
+    ``(placement, makespan, baselines)``.
+    """
+    from .placement import select_placement
+
+    return select_placement(
+        dag, costs, n_workers=n_workers, stage_configs=stage_configs,
+        fractions=fractions, passes=passes, overheads=overheads, seed=seed)
+
+
+def tune_online_hetero(
+    dag,
+    costs,
+    n_workers: int = 20,
+    rounds: int = 40,
+    selector: str = "ucb",
+    arms: list[tuple[str, str, str, str]] | None = None,
+    include_ss: bool = False,
+    overheads: SimOverheads = SimOverheads(),
+    seed: int = 0,
+    online: OnlineScheduler | None = None,
+) -> OnlineTuneResult:
+    """ONLINE substrate placement: bandit arms extended with WHERE to run.
+
+    The closed-loop counterpart of ``select_offline_hetero``: trains an
+    OnlineScheduler whose per-stage arms are
+    ``(technique, layout, victim, substrate)`` 4-tuples
+    (``default_hetero_arms``) over ``rounds`` virtual-time co-execution
+    replays (``replay_online_hetero``); each stage's realized span
+    rewards its arm, so the bandit learns the stage's substrate affinity
+    together with its chunking. Returns an OnlineTuneResult whose
+    ``assign`` maps stages to the converged 4-tuple arms and whose
+    ``makespan`` is the final placement's simulated co-execution
+    makespan. Moldable resizing is disabled (placement replays do not
+    re-chunk mid-run).
+    """
+    from .online import default_hetero_arms
+    from .placement import (DEVICE, HOST, Placement, StagePlacement,
+                            replay_online_hetero, simulate_hetero_dag)
+
+    if online is None:
+        online = OnlineScheduler(
+            selector=selector,
+            arms=arms if arms is not None else default_hetero_arms(include_ss),
+            resize=False, seed=seed)
+    history = replay_online_hetero(
+        dag, costs, online, rounds=rounds, n_workers=n_workers,
+        overheads=overheads, seed=seed)
+    assign = online.best_combos(list(dag.stage_names))
+    placement = Placement({
+        n: StagePlacement(DEVICE if c[3] == DEVICE else HOST)
+        for n, c in assign.items()})
+    final = simulate_hetero_dag(
+        dag, costs, placement,
+        stage_configs={n: c[:3] for n, c in assign.items()},
+        n_workers=n_workers, overheads=overheads, seed=seed).makespan
+    return OnlineTuneResult(assign, final, history, online)
 
 
 # ---------------------------------------------------------------------------

@@ -153,7 +153,12 @@ class PipelineDAG:
 
 @dataclass(frozen=True)
 class TaskEvent:
-    """One executed chunk: timeline entry for ordering/overlap analysis."""
+    """One executed chunk: timeline entry for ordering/overlap analysis.
+
+    ``wait_s`` is the time the worker spent idle/contending between
+    finishing its previous chunk and popping this one (the host-side
+    queue-wait signal aggregated by ``DagResult.stats``).
+    """
 
     stage: str
     task_id: int
@@ -163,6 +168,7 @@ class TaskEvent:
     t_start: float   # seconds since run() began
     t_end: float
     stolen: bool = False
+    wait_s: float = 0.0
 
 
 @dataclass
@@ -195,6 +201,15 @@ class DagResult:
         if r.t_first is None:
             return (0.0, 0.0)
         return (r.t_first, r.t_last)
+
+    @property
+    def stats(self):
+        """Per-stage chunk accounting (a core.simulator.DagStats) built
+        from the event timeline: measured exec seconds and queue waits.
+        A property so executor and simulator results read identically
+        (``res.stats.total_exec_s`` on both)."""
+        from .simulator import stats_from_events
+        return stats_from_events(self.events)
 
     def overlap_s(self, a: str, b: str) -> float:
         """Seconds during which stages ``a`` and ``b`` were both active."""
@@ -357,12 +372,18 @@ def _task_ready(sr: _StageRun, runs: dict[str, _StageRun], task) -> bool:
 
 def _try_pop(sr: _StageRun, runs: dict[str, _StageRun], wid: int):
     """Pop the next runnable chunk for worker ``wid`` (FIFO head of its
-    home queue, else a victim's tail) — or (None, False)."""
-    q = sr.queues[sr.home[wid] if len(sr.home) > wid else 0]
+    home queue, else a victim's tail) — or (None, False).
+
+    ``wid`` may exceed the pool the stage was dealt for (§13 device
+    walker lanes absorbing host chunks); such lanes adopt queue 0 as
+    their home for both the pop and the victim order.
+    """
+    home = sr.home[wid] if len(sr.home) > wid else 0
+    q = sr.queues[home]
     if q and _task_ready(sr, runs, q[0]):
         return q.popleft(), False
     if sr.selector is not None:
-        for v in sr.selector.candidates(sr.home[wid]):
+        for v in sr.selector.candidates(home):
             vq = sr.queues[v]
             if vq and _task_ready(sr, runs, vq[-1]):
                 return vq.pop(), True
@@ -454,13 +475,15 @@ class PipelineExecutor:
         steals = [0]
         t0_run = time.perf_counter()
 
-        def record(sr: _StageRun, task, value, dt, wid, rel0, rel1, stolen):
+        def record(sr: _StageRun, task, value, dt, wid, rel0, rel1, stolen,
+                   wait_s=0.0):
             """Fold a chunk into its stage and the run-wide stats (lock held)."""
             nonlocal remaining_total
             i, s, z = task
             sr.record(task, value, dt, rel0, rel1)
             remaining_total -= 1
-            events.append(TaskEvent(sr.stage.name, i, s, z, wid, rel0, rel1, stolen))
+            events.append(TaskEvent(sr.stage.name, i, s, z, wid, rel0, rel1,
+                                    stolen, wait_s))
             busy[wid] += dt
             ntasks[wid] += 1
             steals[0] += int(stolen)
@@ -480,6 +503,7 @@ class PipelineExecutor:
             while True:
                 sr = task = None
                 stolen = False
+                t_idle = time.perf_counter()
                 with cond:
                     while True:
                         if errors or remaining_total == 0:
@@ -508,7 +532,8 @@ class PipelineExecutor:
                     t1 = time.perf_counter()
                     with cond:
                         record(sr, task, value, t1 - t0, wid,
-                               t0 - t0_run, t1 - t0_run, stolen)
+                               t0 - t0_run, t1 - t0_run, stolen,
+                               t0 - t_idle)
                         cond.notify_all()
                 except BaseException as e:  # surfaced to the caller below
                     with cond:

@@ -53,7 +53,7 @@ __all__ = [
     "ChunkObservation", "StageFeedback", "FeedbackLog", "OnlineChoice",
     "BanditSelector", "UCB1Selector", "EXP3Selector", "SELECTORS",
     "OnlineScheduler", "OnlineRound", "default_online_arms",
-    "rechunk_pending", "replay_online_dag",
+    "default_hetero_arms", "rechunk_pending", "replay_online_dag",
 ]
 
 _LAYOUTS = ("CENTRALIZED", "PERCORE", "PERGROUP")
@@ -69,6 +69,26 @@ def default_online_arms(include_ss: bool = True) -> list[tuple[str, str, str]]:
     """
     techs = [t for t in PARTITIONERS if include_ss or t != "SS"]
     return [(t, l, "SEQ") for t in techs for l in _LAYOUTS]
+
+
+def default_hetero_arms(
+    include_ss: bool = True,
+) -> list[tuple[str, str, str, str]]:
+    """Bandit arms extended with the SUBSTRATE choice (§13).
+
+    Each arm is ``(technique, layout, victim, substrate)``: the host arms
+    are ``default_online_arms`` tagged "host"; the device arms carry one
+    entry per technique (queue layout and victim strategy do not exist on
+    the frozen device walker, so extra device arms would only slow
+    exploration). Played through
+    ``core/placement.py:replay_online_hetero`` / ``core/autotune.py:
+    tune_online_hetero`` — the per-stage bandit learns WHERE a stage runs
+    along with how it is chunked.
+    """
+    techs = [t for t in PARTITIONERS if include_ss or t != "SS"]
+    host = [(t, l, "SEQ", "host") for t in techs for l in _LAYOUTS]
+    device = [(t, "CENTRALIZED", "SEQ", "device") for t in techs]
+    return host + device
 
 
 @dataclass(frozen=True)

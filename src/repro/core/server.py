@@ -53,6 +53,7 @@ from .dag import (
     _try_pop,
 )
 from .executor import SchedulerConfig
+from .hetero import pop_device_task, split_device_tasks, steal_device_tail
 from .online import ChunkObservation
 
 __all__ = [
@@ -330,18 +331,32 @@ class PipelineServer:
     entries stay authoritative; completed chunks stream into the online
     feedback log and stage remainders resize mid-run exactly as in
     PipelineExecutor.
+
+    ``placement`` (job name -> core.placement.Placement) routes each
+    job's stages across the substrates under contention (§13): a stage's
+    device rows are carved into shard deques drained by ``n_device``
+    walker lanes shared by ALL jobs (arbiter order decides whose device
+    work runs next, exactly as for host chunks), while host workers keep
+    the stage's host rows. Idle host workers absorb device tails and
+    drained device lanes absorb host chunks (core/hetero.py), so a
+    placement tuned for an idle machine cannot strand capacity when the
+    pool is contended. Jobs without an entry run host-only.
     """
 
     def __init__(self, config: SchedulerConfig,
                  arbiter: str | Arbiter = "fair",
                  arbiter_kwargs: dict | None = None,
-                 online=None):
+                 online=None,
+                 placement: dict[str, object] | None = None,
+                 n_device: int = 1):
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
         self._arbiter_spec = arbiter
         self._arbiter_kwargs = dict(arbiter_kwargs or {})
         self._online = online
+        self._placement = dict(placement or {})
+        self.n_device = max(1, n_device) if self._placement else 0
 
     def serve(self, jobs: list[Job]) -> ServerResult:
         """Admit ``jobs`` and run the pool until every job completes."""
@@ -360,17 +375,20 @@ class PipelineServer:
         choices: dict[tuple[str, str], object] = {}
 
         n_workers = self.config.n_workers
+        n_device = self.n_device
+        n_lanes = n_workers + n_device
         cond = threading.Condition()
         total_left = [0]    # outstanding tasks in BUILT stage runs
         unbuilt = [0]       # stage runs not built yet (lazy/online mode)
         events: list[ServerTaskEvent] = []
         errors: list[BaseException] = []
-        busy = [0.0] * n_workers
-        ntasks = [0] * n_workers
+        busy = [0.0] * n_lanes
+        ntasks = [0] * n_lanes
         job_tasks = {j.name: 0 for j in jobs}
         job_end = {j.name: 0.0 for j in jobs}
         steals = [0]
         cursors: dict[tuple[int, int], int] = {}
+        device_qs: dict[tuple[str, str], list] = {}  # (job, stage) -> shards
 
         def build_stage(job: Job, name: str) -> _StageRun:
             """Materialize one stage run (lock held in lazy mode).
@@ -389,6 +407,12 @@ class PipelineServer:
             sr = _StageRun(stage,
                            _resolve_stage_config(self.config, stage, override),
                            self._domains)
+            pl = self._placement.get(job.name)
+            if pl is not None:
+                k = pl.device_rows(name, stage.n_rows)
+                shards, _ = split_device_tasks(sr, k, max(1, n_device))
+                if k > 0:
+                    device_qs[(job.name, name)] = shards
             runs[job.name][name] = sr
             stage_order[job.name].append(sr)
             job_unbuilt[job.name] -= 1
@@ -454,10 +478,30 @@ class PipelineServer:
             """Choose (state, stage-run, task, stolen, boosted) per the
             arbiter; ``boosted`` is snapshotted here because other workers
             re-run order() (which rewrites JobState.boosted) while this
-            chunk executes outside the lock."""
+            chunk executes outside the lock.
+
+            Device walker lanes (``wid >= n_workers``) drain the admitted
+            jobs' device shard deques first (same arbiter order), then
+            absorb host chunks; host workers pop host queues first, then
+            absorb device tails (core/hetero.py) — the §13 cross-substrate
+            rebalancing under contention.
+            """
+            is_dev = wid >= n_workers
             admitted = [js for js in states
                         if js.arrival <= t and not js.done]
-            for js in arbiter.order(admitted, t):
+            ordered = arbiter.order(admitted, t)
+            if is_dev:
+                for js in ordered:
+                    jname = js.job.name
+                    for sr in stage_order[jname]:
+                        shards = device_qs.get((jname, sr.stage.name))
+                        if not shards:
+                            continue
+                        got = pop_device_task(shards, wid - n_workers, sr,
+                                              runs[jname])
+                        if got is not None:
+                            return js, sr, got, False, js.boosted
+            for js in ordered:
                 jname = js.job.name
                 jruns = stage_order[jname]
                 if lazy:
@@ -486,30 +530,49 @@ class PipelineServer:
                     if got is not None:
                         cursors[(wid, js.seq)] = (idx + 1) % ns
                         return js, sr, got, stolen, js.boosted
+            if not is_dev and device_qs:
+                for js in ordered:
+                    jname = js.job.name
+                    for sr in stage_order[jname]:
+                        shards = device_qs.get((jname, sr.stage.name))
+                        if not shards:
+                            continue
+                        got, delta = steal_device_tail(shards, sr,
+                                                       runs[jname])
+                        if got is not None:
+                            job_left[jname] += delta
+                            total_left[0] += delta
+                            return js, sr, got, True, js.boosted
             return None
 
         def worker(wid: int) -> None:
-            """Pool thread: serve arbiter-ordered jobs until the pool drains."""
-            while True:
-                choice = None
-                with cond:
-                    while True:
-                        if errors or (total_left[0] == 0
-                                      and unbuilt[0] == 0):
-                            return
-                        t = time.perf_counter() - t0_run
-                        choice = pick(wid, t)
-                        if choice is not None:
-                            break
-                        pending = [js.arrival - t for js in states
-                                   if js.arrival > t]
-                        cond.wait(timeout=min([0.05] + [max(w, 1e-4)
-                                                        for w in pending]))
-                    js, sr, task, stolen, boosted = choice
-                    inputs = _stage_inputs(sr, runs[js.job.name])
-                _, s, z = task
-                t0 = time.perf_counter()
-                try:
+            """Pool thread: serve arbiter-ordered jobs until the pool drains.
+
+            One error boundary wraps the whole loop: an exception anywhere
+            (arbiter order, lazy builds, device-shard bookkeeping, stage
+            ops) lands in ``errors`` and is re-raised by serve() — a lane
+            dying silently must not let the drain report success.
+            """
+            try:
+                while True:
+                    choice = None
+                    with cond:
+                        while True:
+                            if errors or (total_left[0] == 0
+                                          and unbuilt[0] == 0):
+                                return
+                            t = time.perf_counter() - t0_run
+                            choice = pick(wid, t)
+                            if choice is not None:
+                                break
+                            pending = [js.arrival - t for js in states
+                                       if js.arrival > t]
+                            cond.wait(timeout=min([0.05] + [max(w, 1e-4)
+                                                            for w in pending]))
+                        js, sr, task, stolen, boosted = choice
+                        inputs = _stage_inputs(sr, runs[js.job.name])
+                    _, s, z = task
+                    t0 = time.perf_counter()
                     value = sr.stage.op(inputs, s, z)
                     t1 = time.perf_counter()
                     with cond:
@@ -536,14 +599,13 @@ class PipelineServer:
                                 and job_unbuilt[js.job.name] == 0):
                             finish_job(js, job_end[js.job.name])
                         cond.notify_all()
-                except BaseException as e:  # surfaced to the caller below
-                    with cond:
-                        errors.append(e)
-                        cond.notify_all()
-                    return
+            except BaseException as e:  # surfaced to the caller below
+                with cond:
+                    errors.append(e)
+                    cond.notify_all()
 
         threads = [threading.Thread(target=worker, args=(w,), daemon=True)
-                   for w in range(n_workers)]
+                   for w in range(n_lanes)]
         for th in threads:
             th.start()
         for th in threads:

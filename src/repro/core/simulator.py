@@ -39,7 +39,73 @@ from .victim import make_victim_selector
 
 __all__ = ["SimOverheads", "SimResult", "simulate", "DagSimResult",
            "simulate_dag", "frozen_dag_makespans", "ServerSimResult",
-           "simulate_server"]
+           "simulate_server", "DagStats", "stats_from_events"]
+
+
+@dataclass
+class DagStats:
+    """Per-stage chunk accounting shared by the host and simulated paths.
+
+    One entry per stage: executed seconds (``exec_s``, locality penalties
+    included), seconds spent waiting on queue locks (``queue_wait_s``),
+    seconds spent moving rows across the host<->device boundary
+    (``transfer_s`` — virtual time in the simulators; 0.0 on the real
+    host pool, where a cross-substrate consumption is counted in
+    ``transfers`` but the copy is not separately timed), and the chunk /
+    transfer counts. The reconciliation invariants these totals satisfy
+    against the makespan are asserted in ``tests/test_simulator.py``.
+    """
+
+    exec_s: dict[str, float] = field(default_factory=dict)
+    queue_wait_s: dict[str, float] = field(default_factory=dict)
+    transfer_s: dict[str, float] = field(default_factory=dict)
+    chunks: dict[str, int] = field(default_factory=dict)
+    transfers: dict[str, int] = field(default_factory=dict)
+
+    def add_chunk(self, stage: str, exec_s: float, wait_s: float = 0.0) -> None:
+        """Fold one executed chunk into the per-stage totals."""
+        self.exec_s[stage] = self.exec_s.get(stage, 0.0) + exec_s
+        self.queue_wait_s[stage] = self.queue_wait_s.get(stage, 0.0) + wait_s
+        self.chunks[stage] = self.chunks.get(stage, 0) + 1
+
+    def add_transfer(self, stage: str, seconds: float) -> None:
+        """Fold one cross-substrate transfer (charged to the consumer)."""
+        self.transfer_s[stage] = self.transfer_s.get(stage, 0.0) + seconds
+        self.transfers[stage] = self.transfers.get(stage, 0) + 1
+
+    @property
+    def total_exec_s(self) -> float:
+        """Summed executed seconds over all stages."""
+        return sum(self.exec_s.values())
+
+    @property
+    def total_queue_wait_s(self) -> float:
+        """Summed queue-wait seconds over all stages."""
+        return sum(self.queue_wait_s.values())
+
+    @property
+    def total_transfer_s(self) -> float:
+        """Summed transfer seconds over all stages."""
+        return sum(self.transfer_s.values())
+
+    @property
+    def total_chunks(self) -> int:
+        """Total chunk count over all stages."""
+        return sum(self.chunks.values())
+
+
+def stats_from_events(events) -> DagStats:
+    """Build DagStats from a TaskEvent timeline (the host executors' path).
+
+    Exec time is each event's span, queue wait its measured ``wait_s``;
+    transfer counts are left to the caller (the hetero executor folds its
+    cross-substrate consumption counts in afterwards).
+    """
+    stats = DagStats()
+    for ev in events:
+        stats.add_chunk(ev.stage, ev.t_end - ev.t_start,
+                        getattr(ev, "wait_s", 0.0))
+    return stats
 
 
 @dataclass(frozen=True)
@@ -251,6 +317,7 @@ class DagSimResult:
     stage_start: dict[str, float]
     stage_finish: dict[str, float]
     queue_wait: float = 0.0
+    stats: DagStats | None = None
 
     def overlap_s(self, a: str, b: str) -> float:
         """Virtual seconds during which stages ``a`` and ``b`` were both active."""
@@ -348,6 +415,7 @@ def _simulate_frozen(ddt: DeviceDagTables, costs: dict[str, np.ndarray],
     finish = {n: 0.0 for n in names}
     busy = [0.0] * ddt.n_shards
     shard_end = [0.0] * ddt.n_shards
+    stats = DagStats()
     for sh in range(ddt.n_shards):
         t = ov.h_launch
         for sid, s0, z in ddt.slots(sh):
@@ -357,12 +425,13 @@ def _simulate_frozen(ddt: DeviceDagTables, costs: dict[str, np.ndarray],
             t += ov.h_local + c
             finish[name] = max(finish[name], t)
             busy[sh] += c
+            stats.add_chunk(name, c)
         shard_end[sh] = t
     return DagSimResult(
         makespan=max(shard_end, default=0.0), per_worker_busy=busy,
         stage_start={n: (0.0 if math.isinf(start[n]) else start[n])
                      for n in names},
-        stage_finish=dict(finish), queue_wait=0.0)
+        stage_finish=dict(finish), queue_wait=0.0, stats=stats)
 
 
 def frozen_dag_makespans(
@@ -496,6 +565,7 @@ def simulate_dag(
     cursor = [w % nstages for w in range(n_workers)]
     busy = [0.0] * n_workers
     queue_wait = 0.0
+    stats = DagStats()
     last_completion = 0.0
     remaining = sum(len(st.chunks) for st in order)
     for st in order:
@@ -523,6 +593,7 @@ def simulate_dag(
         cursor[w] = (idx + 1) % nstages
         tid, s0, z0, cost, _, t_end, wait = _pop_chunk(st, w, t, ov)
         queue_wait += wait
+        stats.add_chunk(st.name, cost, wait)
         busy[w] += cost
         last_completion = max(last_completion, t_end)
         remaining -= 1
@@ -556,7 +627,7 @@ def simulate_dag(
                      for n in names},
         stage_finish={n: (0.0 if math.isinf(stages[n].finish) else stages[n].finish)
                       for n in names},
-        queue_wait=queue_wait)
+        queue_wait=queue_wait, stats=stats)
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,7 @@ reproducible and property tests stay meaningful offline.
 
 Supported API: ``given`` (keyword strategies), ``settings(max_examples=...,
 deadline=...)``, ``strategies.integers``, ``strategies.sampled_from``,
-``strategies.booleans``, and ``strategies.lists``.
+``strategies.booleans``, ``strategies.floats``, and ``strategies.lists``.
 """
 
 from __future__ import annotations
@@ -46,6 +46,10 @@ def _booleans() -> _Strategy:
     return _Strategy(lambda rng: bool(rng.getrandbits(1)))
 
 
+def _floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
 def _lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
     def draw(rng: random.Random):
         size = rng.randint(min_size, max_size)
@@ -57,6 +61,7 @@ strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.sampled_from = _sampled_from
 strategies.booleans = _booleans
+strategies.floats = _floats
 strategies.lists = _lists
 
 

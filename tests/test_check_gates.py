@@ -18,6 +18,9 @@ GOOD_ROWS = {
     "pipeline_server_mixed_load": (14852.2, "p99_gain=38.94%"),
     "online_linreg_adaptive": (92.2, "offline=92.2us margin110=10.00% vs_median=64.09%"),
     "online_resize_merge": (106.5, "static=10240us resizes=1 resize_gain=98.96%"),
+    "hetero_linreg_placement": (1092.4,
+                                "equal=1 host=5328.6us device=17326.2us "
+                                "vs_best=79.50% mixed_gain=79.50%"),
 }
 
 
@@ -170,6 +173,74 @@ def test_baseline_mode_mismatch_fails(tmp_path, capsys):
         "online_linreg_adaptive": {"us_per_call": 92.2, "tolerance": 0.5}}}))
     assert cg.main([csv, "--against-baseline", str(base)]) == 1
     assert "BASELINE MODE MISMATCH" in capsys.readouterr().out
+
+
+def test_hetero_gate_requires_all_three_patterns(tmp_path):
+    """equal / vs_best / mixed_gain must all be present and non-negative."""
+    for derived in ("equal=-1 vs_best=5.00% mixed_gain=5.00%",
+                    "equal=1 vs_best=-0.10% mixed_gain=5.00%",
+                    "equal=1 vs_best=5.00% mixed_gain=-0.10%",
+                    "equal=1 vs_best=5.00%"):
+        rows = dict(GOOD_ROWS)
+        rows["hetero_linreg_placement"] = (1092.4, derived)
+        assert cg.main([write_csv(tmp_path, rows)]) == 1, derived
+
+
+def _substrate(cores=4, backend="cpu", kind="cpu"):
+    return {"host_cpu_count": cores, "jax_backend": backend,
+            "device_kind": kind, "platform": "linux-x", "python": "3.10"}
+
+
+def test_baseline_substrate_mismatch_fails(tmp_path, capsys):
+    """Numbers accepted on one machine must not gate a different one."""
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    (tmp_path / "bench_meta.json").write_text(json.dumps(
+        {"run_id": "x", "mode": "quick", "substrate": _substrate(cores=16)}))
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps({
+        "mode": "quick", "substrate": _substrate(cores=4),
+        "rows": {"online_linreg_adaptive":
+                 {"us_per_call": 92.2, "tolerance": 0.5}}}))
+    assert cg.main([csv, "--against-baseline", str(base)]) == 1
+    assert "SUBSTRATE MISMATCH" in capsys.readouterr().out
+
+
+def test_baseline_substrate_match_passes(tmp_path):
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    (tmp_path / "bench_meta.json").write_text(json.dumps(
+        {"run_id": "x", "mode": "quick", "substrate": _substrate()}))
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps({
+        "mode": "quick", "substrate": _substrate(),
+        "rows": {n: {"us_per_call": us, "tolerance": 0.5}
+                 for n, (us, _d) in GOOD_ROWS.items()}}))
+    assert cg.main([csv, "--against-baseline", str(base)]) == 0
+
+
+def test_baseline_without_substrate_skips_check(tmp_path):
+    """Pre-stamp baselines (no substrate block) must keep gating."""
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    (tmp_path / "bench_meta.json").write_text(json.dumps(
+        {"run_id": "x", "mode": "quick", "substrate": _substrate()}))
+    base = write_baseline(tmp_path, full_baseline_rows())
+    assert cg.main([csv, "--against-baseline", str(base)]) == 0
+
+
+def test_update_baseline_records_substrate(tmp_path):
+    csv = write_csv(tmp_path, GOOD_ROWS)
+    (tmp_path / "bench_meta.json").write_text(json.dumps(
+        {"run_id": "x", "mode": "quick", "substrate": _substrate(cores=8)}))
+    base = tmp_path / "baseline.json"
+    assert cg.main([csv, "--update-baseline", str(base)]) == 0
+    data = json.loads(base.read_text())
+    assert data["substrate"]["host_cpu_count"] == 8
+    assert set(data["substrate"]) == set(cg.SUBSTRATE_KEYS)
+    # a matching re-check passes; a different machine fails
+    assert cg.main([csv, "--against-baseline", str(base)]) == 0
+    (tmp_path / "bench_meta.json").write_text(json.dumps(
+        {"run_id": "y", "mode": "quick",
+         "substrate": _substrate(cores=8, backend="tpu", kind="TPU v4")}))
+    assert cg.main([csv, "--against-baseline", str(base)]) == 1
 
 
 def test_update_baseline_records_mode(tmp_path):

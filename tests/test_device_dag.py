@@ -244,6 +244,126 @@ def test_cc_iteration_super_table(n_shards):
 
 
 # ---------------------------------------------------------------------------
+# property test: host PipelineExecutor vs device walker, bit-wise, on
+# RANDOMIZED DAG shapes/techniques — SPLIT placements (core/hetero.py) are
+# only safe because any tile can run on either substrate with identical
+# results; this pins that equivalence beyond the two hand-built lowerings.
+# ---------------------------------------------------------------------------
+
+def _random_lowering(n_stages, tiles, tile, combine_flags, dep_prod, seed):
+    """A random chain DAG whose host ops and walker bodies share per-tile
+    jnp math: stage i computes ``X_tile * (i+1)`` plus its producer's
+    contribution (elementwise row tile of a concat producer, or the full
+    accumulator of a sum producer — the kind is forced by the producer's
+    combine, mirroring the walker's supported reads)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.dag_walk import WalkOperand, WalkStage
+
+    n = tiles * tile
+    w = 8
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(-1.0, 1.0, size=(n, w)).astype(np.float32)
+    combine = ["concat" if f else "sum" for f in combine_flags[:n_stages]]
+    combine[0] = "concat"  # a root producer keeps every dep kind reachable
+
+    stages_host, stages_dev = [], []
+    for i in range(n_stages):
+        name = f"s{i}"
+        c = np.float32(i + 1)
+        dep = None
+        if i > 0:
+            j = dep_prod[i - 1] % i
+            kind = "elementwise" if combine[j] == "concat" else "full"
+            dep = (f"s{j}", kind)
+
+        def tile_math(Xb, prod, dep=dep, c=c):
+            v = Xb * c
+            if prod is not None:
+                v = v + prod
+            return v
+
+        def host_op(inputs, s, z, dep=dep, tile_math=tile_math,
+                    comb=combine[i]):
+            outs = None
+            for t in range(s, s + z):
+                Xb = jnp.asarray(X[t * tile:(t + 1) * tile])
+                prod = None
+                if dep is not None:
+                    pname, kind = dep
+                    prod = (jnp.asarray(inputs[pname][t])
+                            if kind == "elementwise"
+                            else jnp.asarray(inputs[pname]))
+                v = tile_math(Xb, prod)
+                if comb == "concat":
+                    outs = [v] if outs is None else outs + [v]
+                else:
+                    v = v.sum(axis=0)
+                    outs = v if outs is None else outs + v
+            return jnp.stack(outs) if comb == "concat" else outs
+
+        def dev_body(ctx, ins, out, dep=dep, tile_math=tile_math,
+                     comb=combine[i]):
+            prod = ins[dep[0]][...] if dep is not None else None
+            v = tile_math(ins["X"][...], prod)
+            if comb == "concat":
+                out[...] = v
+            else:
+                out[...] += v.sum(axis=0)
+
+        deps = ()
+        reads = ()
+        if dep is not None:
+            pname, kind = dep
+            deps = (StageDep(pname, kind),)
+            reads = ((pname, "rows" if kind == "elementwise" else "full"),)
+        stages_host.append(Stage(name, tiles, host_op, combine=combine[i],
+                                 deps=deps))
+        out_shape = (n, w) if combine[i] == "concat" else (w,)
+        stages_dev.append(WalkStage(name, n, out_shape, jnp.float32,
+                                    combine[i], dev_body, operands=("X",),
+                                    reads=reads))
+    operands = [WalkOperand("X", (tile, w), ("row", "zero"))]
+    values = {"X": jnp.asarray(X)}
+    return PipelineDAG(stages_host), stages_dev, operands, values, combine
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_stages=st.integers(2, 3),
+    tiles=st.integers(2, 6),
+    combine_flags=st.lists(st.booleans(), min_size=3, max_size=3),
+    dep_prod=st.lists(st.integers(0, 2), min_size=2, max_size=2),
+    tech_i=st.lists(st.integers(0, len(TECHS) - 1), min_size=3, max_size=3),
+    seed=st.integers(0, 4),
+)
+def test_random_dag_host_device_bitwise(n_stages, tiles, combine_flags,
+                                        dep_prod, tech_i, seed):
+    from repro.kernels.dag_walk import dag_walk
+
+    tile = 4
+    dag, dev_stages, operands, values, combine = _random_lowering(
+        n_stages, tiles, tile, combine_flags, dep_prod, seed)
+    # SS/1 worker: the host folds sum stages in flat ascending tile order,
+    # exactly like the walker (see DeviceLowering docstring)
+    host = PipelineExecutor(dag, SchedulerConfig(
+        technique="SS", n_workers=1)).run()
+    techniques = {f"s{i}": TECHS[tech_i[i]] for i in range(n_stages)}
+    ddt = build_dag_tables(dag, 1, techniques, n_shards=1, n_workers=4,
+                           seed=seed)
+    rows = ddt.tables[0].copy()
+    rows[:, 1:] *= tile  # tile units -> row space for the walker
+    out = dag_walk(dev_stages, operands, values, rows, tile)
+    for i in range(n_stages):
+        name = f"s{i}"
+        hv = np.asarray(host.values[name])
+        if combine[i] == "concat":
+            hv = hv.reshape(-1, hv.shape[-1])
+        assert np.array_equal(hv, np.asarray(out[name])), (
+            name, combine[i], techniques)
+
+
+# ---------------------------------------------------------------------------
 # frozen-replay simulation + device autotuning + rebalancing
 # ---------------------------------------------------------------------------
 

@@ -80,6 +80,66 @@ def test_select_offline_prefers_static_for_dense():
     assert static_best <= min(scores.values()) * 1.02
 
 
+def test_dag_stats_reconcile_single_worker_exact():
+    """One worker, CENTRALIZED: virtual makespan decomposes exactly into
+    executed seconds plus one queue hold per chunk (no contention)."""
+    from repro.core import PipelineDAG, Stage, simulate_dag
+
+    n = 256
+    dag = PipelineDAG([Stage("a", n, lambda i, s, z: None)])
+    ov = SimOverheads()
+    res = simulate_dag(dag, {"a": np.full(n, 1e-6)},
+                       ("GSS", "CENTRALIZED", "SEQ"), n_workers=1,
+                       overheads=ov)
+    expect = res.stats.total_exec_s + res.stats.total_chunks * ov.h_access
+    assert res.makespan == pytest.approx(expect)
+    assert res.stats.total_queue_wait_s == pytest.approx(res.queue_wait)
+    assert res.stats.total_transfer_s == 0.0
+
+
+def test_dag_stats_reconcile_multi_worker_bounds():
+    """P workers: per-chunk accounting must bound and cover the makespan."""
+    from repro.core import PipelineDAG, Stage, StageDep, simulate_dag
+
+    n = 4096
+    rng = np.random.default_rng(3)
+    dag = PipelineDAG([
+        Stage("prop", n, lambda i, s, z: None),
+        Stage("chk", n, lambda i, s, z: None, combine="sum",
+              deps=(StageDep("prop", "elementwise"),)),
+    ])
+    costs = {"prop": rng.pareto(1.3, n) * 1e-6 + 1e-7,
+             "chk": np.full(n, 2e-8)}
+    res = simulate_dag(dag, costs, ("MFSC", "PERCORE", "SEQ"), n_workers=8)
+    stats = res.stats
+    # exec time is conserved between the stats and the per-worker busy view
+    assert sum(res.per_worker_busy) == pytest.approx(stats.total_exec_s)
+    assert stats.total_queue_wait_s == pytest.approx(res.queue_wait)
+    assert set(stats.chunks) == {"prop", "chk"}
+    # the work had to fit inside the makespan across 8 lanes, and no
+    # single chunk's end can exceed it
+    assert res.makespan >= stats.total_exec_s / 8 - 1e-12
+    assert res.makespan >= max(res.stage_finish.values()) - 1e-12
+
+
+def test_host_executor_stats_match_events():
+    """The real pool's DagResult.stats reconciles with its timeline."""
+    from repro.core import PipelineDAG, PipelineExecutor, SchedulerConfig, Stage
+
+    n = 64
+    dag = PipelineDAG([Stage("a", n, lambda i, s, z: np.zeros(z))])
+    res = PipelineExecutor(dag, SchedulerConfig(
+        technique="GSS", n_workers=2)).run()
+    stats = res.stats
+    assert stats.total_chunks == len(res.events)
+    assert stats.total_exec_s == pytest.approx(
+        sum(e.t_end - e.t_start for e in res.events))
+    assert stats.total_queue_wait_s == pytest.approx(
+        sum(e.wait_s for e in res.events))
+    # wall clock covers the measured work spread over the pool
+    assert res.wall_time_s >= stats.total_exec_s / 2 - 1e-9
+
+
 def test_online_tuner_converges():
     costs = _sparse_costs(8000)
     tuner = OnlineTuner.default(seed=0)
