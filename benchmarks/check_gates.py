@@ -19,6 +19,14 @@ row must never silently pass:
                                 launches in simulated makespan (sim_gain >= 0)
   pipeline_server_mixed_load    weighted-fair p99 job latency <= FIFO p99
                                 on the mixed workload (p99_gain >= 0)
+  pipeline_server_openloop      on the heavy-tailed open-loop trace, the
+                                admission+batching front door achieves
+                                p99.9 latency <= the no-admission FIFO
+                                baseline (p999_gain >= 0) and a deadline
+                                hit-rate >= baseline with shed deadline
+                                jobs counted as misses (hit_gain >= 0);
+                                batched device execution bit-equal to
+                                unbatched (equal=1)
   online_linreg_adaptive        the online feedback loop lands within 1.10x
                                 of the offline search (margin110 >= 0) and
                                 strictly beats the median static technique
@@ -64,6 +72,9 @@ GATES: dict[str, tuple[str, ...]] = {
     "pipeline_dag_cc_regression": (r"gain=(-?[\d.]+)%",),
     "device_dag_linreg": (r"equal=(-?[\d.]+)", r"sim_gain=(-?[\d.]+)%"),
     "pipeline_server_mixed_load": (r"p99_gain=(-?[\d.]+)%",),
+    "pipeline_server_openloop": (r"p999_gain=(-?[\d.]+)%",
+                                 r"hit_gain=(-?[\d.]+)%",
+                                 r"equal=(-?[\d.]+)"),
     "online_linreg_adaptive": (r"margin110=(-?[\d.]+)%", r"vs_median=(-?[\d.]+)%"),
     "online_resize_merge": (r"resize_gain=(-?[\d.]+)%",),
     "hetero_linreg_placement": (r"equal=(-?[\d.]+)", r"vs_best=(-?[\d.]+)%",
@@ -74,7 +85,8 @@ TOLERANCE = -1e-6  # simulator determinism should make these exact
 # rows whose us_per_call comes from the deterministic virtual-time
 # simulator: byte-stable across runs, so the baseline gate holds them tight.
 DETERMINISTIC_PREFIXES = ("pipeline_dag_cc_regression",
-                          "pipeline_server_mixed_load", "online_",
+                          "pipeline_server_mixed_load",
+                          "pipeline_server_openloop", "online_",
                           "hetero_")
 
 # provenance keys that must match between the accepted baseline and the

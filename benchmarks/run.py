@@ -306,6 +306,62 @@ def bench_pipeline_server(quick: bool = False) -> None:
         f"jobs={len(jobs)} p99_gain={(p['fifo_99'] - p['fair_99']) / p['fifo_99'] * 100:.2f}%")
 
 
+def bench_openloop(quick: bool = False) -> None:
+    """Serving front-door row (§14): open-loop heavy-tailed trace replay.
+
+    ``pipeline_server_openloop`` is the CI-gated row. On an overloaded
+    (load 1.5) Pareto-interarrival trace, the admission+batching front
+    door (deadline-slack shedding, per-tenant token bucket on the
+    deadline-free tenant, same-shape coalescing, FeedbackLog-informed
+    service estimates) must achieve p99.9 completed-job latency <= the
+    no-admission FIFO baseline (p999_gain >= 0) AND a deadline hit-rate
+    >= baseline, counting every shed deadline job as a miss
+    (hit_gain >= 0) — shedding is only allowed to win by keeping the
+    jobs it admits fast. equal=1 asserts the batching primitive itself:
+    same-shape device lowerings merged into ONE super-table launch
+    produce bit-identical member results to unbatched launches.
+    """
+    import numpy as np
+
+    from repro.core import (AdmissionController, BatchPolicy, TokenBucket,
+                            heavy_tailed_trace, replay_open_loop)
+    from repro.core.online import FeedbackLog
+    from repro.vee.apps import (linreg_device_lowering,
+                                merge_device_lowerings, run_device_dag,
+                                split_device_values)
+
+    n_jobs = 800 if quick else 2000
+    trace = heavy_tailed_trace(n_jobs, seed=3, load=1.5, n_workers=8)
+    base = replay_open_loop(trace, n_workers=8, arbiter="fifo")
+    fb = FeedbackLog()
+    adm = AdmissionController(
+        buckets={"etl": TokenBucket(rate=400.0, capacity=20)}, feedback=fb)
+    front = replay_open_loop(trace, n_workers=8, arbiter="fair",
+                             admission=adm, batching=BatchPolicy(2e-3, 8),
+                             feedback=fb)
+
+    lows = [linreg_device_lowering(256, 9, tile=64, seed=s) for s in (1, 2, 3)]
+    singles = [run_device_dag(low, "SS")[0] for low in lows]
+    merged_vals, _ = run_device_dag(merge_device_lowerings(lows), "SS")
+    members = split_device_values(merged_vals, len(lows))
+    equal = int(all(np.array_equal(members[j][k], singles[j][k])
+                    for j in range(len(lows)) for k in singles[j]))
+
+    p999_base = base.latency_percentile(99.9) * 1e6
+    p999_front = front.latency_percentile(99.9) * 1e6
+    hit_base = base.deadline_hit_rate()
+    hit_front = front.deadline_hit_rate()
+    row("pipeline_server_openloop", p999_front,
+        f"p50={front.latency_percentile(50) * 1e6:.1f}us "
+        f"p99={front.latency_percentile(99) * 1e6:.1f}us "
+        f"p999={p999_front:.1f}us p999_fifo={p999_base:.1f}us "
+        f"hit={hit_front:.3f} hit_fifo={hit_base:.3f} "
+        f"shed={front.shed_rate * 100:.1f}% batches={front.n_batches} "
+        f"jobs={n_jobs} "
+        f"p999_gain={(p999_base - p999_front) / p999_base * 100:.2f}% "
+        f"hit_gain={(hit_front - hit_base) * 100:.2f}% equal={equal}")
+
+
 def bench_online(quick: bool = False) -> None:
     """Runtime feedback-loop rows (§12): the online bandit vs the offline
     search and the static techniques, in deterministic virtual time.
@@ -447,6 +503,7 @@ def main(quick: bool = False, run_id: str | None = None) -> None:
     bench_pipeline_dag(quick=quick)
     bench_device_dag(quick=quick)
     bench_pipeline_server(quick=quick)
+    bench_openloop(quick=quick)
     bench_online(quick=quick)
     bench_hetero(quick=quick)
     if not quick:

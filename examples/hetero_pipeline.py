@@ -68,3 +68,18 @@ print(f"  beta matches oracle: "
 print(f"  absorbed by host/device: {hres.absorbed_by_host}/"
       f"{hres.absorbed_by_device}, cross-substrate consumptions: "
       f"{sum(hres.cross_consumptions.values())}")
+
+# --- 4. the §14 unified surface: placement rides on the Submission --------
+from repro.core import HeteroExecutor, Submission, make_placement
+
+low = linreg_device_lowering(512, 9, tile=64)
+pool = HeteroExecutor(low.dag, SchedulerConfig(technique="SS", n_workers=1),
+                      make_placement("host", low.dag.stage_names))
+sub = Submission(placement=make_placement("moments=device,syrk_gemv=split:0.5"))
+hres2 = pool.run(sub)
+equal2 = all(np.array_equal(np.asarray(host_only.values[k]),
+                            np.asarray(hres2.values[k]))
+             for k in host_only.values)
+print("\n— §14 Submission-scoped placement on the same pool —")
+print("  spec: moments=device,syrk_gemv=split:0.5 "
+      f"(bit-equal to host-only: {equal2})")

@@ -12,7 +12,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.core import (Job, PipelineServer, SchedulerConfig,
+from repro.core import (Job, PipelineServer, SchedulerConfig, Submission,
                         select_offline_server, simulate_server)
 from repro.vee import linreg_dag, recommendation_dag, rmat_graph
 from repro.vee.apps import cc_iteration_dag
@@ -69,12 +69,15 @@ for jname, stages in assign.items():
     print(f"  {jname}: {tag}")
 
 # --- 3. real threaded drain under the tuned fair-share policy --------------
-jobs = [Job(j.name, j.dag, priority=j.priority, tenant=j.tenant,
-            weight=j.weight, arrival_s=j.arrival_s, deadline_s=j.deadline_s,
-            per_stage=assign[j.name], stage_costs=j.stage_costs)
-        for j in make_jobs()]
-res = PipelineServer(SchedulerConfig(n_workers=4, queue_layout="PERCORE"),
-                     arbiter="fair").serve(jobs)
+# the §14 unified surface: one Submission record per job, queued via submit()
+server = PipelineServer(SchedulerConfig(n_workers=4, queue_layout="PERCORE"),
+                        arbiter="fair")
+for j in make_jobs():
+    server.submit(Submission(
+        dag=j.dag, name=j.name, priority=j.priority, tenant=j.tenant,
+        weight=j.weight, arrival_s=j.arrival_s, deadline_s=j.deadline_s,
+        per_stage=assign[j.name], stage_costs=j.stage_costs))
+res = server.serve()
 print(f"[serve] real pool drained {len(res.jobs)} jobs in "
       f"{res.wall_time_s * 1e3:.1f}ms "
       f"(p99 latency {res.latency_percentile(99) * 1e3:.1f}ms, "

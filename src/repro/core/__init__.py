@@ -6,11 +6,30 @@ technique-driven work stealing and 4 victim-selection strategies), plus the
 distributed coordinator, the TPU device-schedule adaptation, the
 auto-selection extension (the paper's stated future work), the pipeline-DAG
 runtime (DESIGN.md §9), the multi-tenant serving runtime (DESIGN.md §10),
-the online adaptive-scheduling feedback loop (DESIGN.md §12), and the
+the online adaptive-scheduling feedback loop (DESIGN.md §12), the
 heterogeneous placement & co-execution layer that splits pipeline DAGs
-across the host pool and the device walker (DESIGN.md §13).
+across the host pool and the device walker (DESIGN.md §13), and the
+serving front door — open-loop admission control, same-shape batching,
+pool autoscaling — behind the unified Submission surface and string-spec
+registry (DESIGN.md §14).
 """
 
+from .admission import (
+    AdmissionController,
+    AdmissionDecision,
+    AutoscalePolicy,
+    BatchPolicy,
+    FrontDoor,
+    FrontDoorResult,
+    MemberOutcome,
+    OpenLoopResult,
+    TokenBucket,
+    batch_signature,
+    coalesce_submissions,
+    heavy_tailed_trace,
+    merge_dags,
+    replay_open_loop,
+)
 from .autotune import (
     DagTuner,
     OnlineTuneResult,
@@ -112,6 +131,8 @@ from .simulator import (
     simulate_server,
     stats_from_events,
 )
+from .registry import REGISTRY, make, make_config, make_placement
+from .submit import Submission, as_submission
 from .task import RangeTask, tasks_from_schedule
 from .victim import VICTIM_STRATEGIES, VictimSelector, make_victim_selector
 
@@ -145,4 +166,10 @@ __all__ = [
     "calibrate_hetero_costs", "simulate_hetero_dag", "select_placement",
     "replay_online_hetero", "HeteroExecutor", "HeteroResult",
     "select_offline_hetero", "tune_online_hetero",
+    "Submission", "as_submission",
+    "REGISTRY", "make", "make_config", "make_placement",
+    "TokenBucket", "AdmissionDecision", "AdmissionController",
+    "batch_signature", "merge_dags", "coalesce_submissions", "BatchPolicy",
+    "AutoscalePolicy", "MemberOutcome", "OpenLoopResult", "replay_open_loop",
+    "heavy_tailed_trace", "FrontDoor", "FrontDoorResult",
 ]

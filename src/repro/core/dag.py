@@ -437,17 +437,47 @@ class PipelineExecutor:
         per_stage: dict[str, SchedulerConfig | tuple[str, str, str]] | None = None,
         online=None,
     ):
+        from .submit import deprecated
+
         self.dag = dag
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
+        if per_stage is not None:
+            deprecated("PipelineExecutor(per_stage=...) is deprecated; pass "
+                       "run(Submission(per_stage=...)) instead")
+        if online is not None:
+            deprecated("PipelineExecutor(online=...) is deprecated; pass "
+                       "run(Submission(online=...)) instead")
         self._per_stage = dict(per_stage or {})
         self._online = online
 
-    def run(self) -> DagResult:
-        """Execute every stage to completion on the shared pool."""
-        online = self._online
-        overrides: dict = dict(self._per_stage)
+    def run(self, sub=None) -> DagResult:
+        """Execute every stage to completion on the shared pool.
+
+        ``sub`` (a §14 ``Submission``) carries the per-submission knobs:
+        ``sub.dag`` (when set) replaces the constructor DAG for this run,
+        ``sub.per_stage`` the per-stage overrides, ``sub.online`` the
+        online scheduler. The deprecated constructor kwargs keep working
+        one release behind a DeprecationWarning.
+        """
+        if sub is not None:
+            from .submit import as_submission
+
+            sub = as_submission(sub)
+            if sub.dag is not None and sub.dag is not self.dag:
+                return PipelineExecutor(sub.dag, self.config).run(
+                    sub.replace(dag=None))
+            online = sub.online if sub.online is not None else self._online
+            overrides = dict(self._per_stage)
+            overrides.update(sub.per_stage or {})
+        else:
+            online = self._online
+            overrides = dict(self._per_stage)
+        return self._run(overrides, online)
+
+    def _run(self, overrides: dict, online) -> DagResult:
+        """The §7 execution loop with resolved overrides/online scheduler."""
         choices: dict[str, OnlineChoice] = {}
         if online is not None:
             for name in self.dag.order:

@@ -219,18 +219,43 @@ class HeteroExecutor:
         n_device: int = 1,
         rebalance: bool = True,
     ):
+        from .submit import deprecated
+
         self.dag = dag
         self.config = config
         self.placement = placement
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
+        if per_stage is not None:
+            deprecated("HeteroExecutor(per_stage=...) is deprecated; pass "
+                       "run(Submission(per_stage=...)) instead")
         self._per_stage = dict(per_stage or {})
         self.n_device = max(1, n_device)
         self.rebalance = rebalance
 
-    def run(self) -> HeteroResult:
-        """Execute every stage to completion across both substrates."""
+    def run(self, sub=None) -> HeteroResult:
+        """Execute every stage to completion across both substrates.
+
+        ``sub`` (a §14 ``Submission``) may carry per-submission knobs:
+        ``sub.dag`` replaces the constructor DAG for this run,
+        ``sub.per_stage`` layers on top of any constructor overrides, and
+        ``sub.placement`` replaces the constructor placement.
+        """
         overrides = dict(self._per_stage)
+        if sub is not None:
+            from .submit import as_submission
+
+            sub = as_submission(sub)
+            if (sub.dag is not None and sub.dag is not self.dag) \
+                    or sub.placement is not None:
+                ex = HeteroExecutor(
+                    sub.dag if sub.dag is not None else self.dag,
+                    self.config,
+                    sub.placement if sub.placement is not None
+                    else self.placement,
+                    n_device=self.n_device, rebalance=self.rebalance)
+                return ex.run(sub.replace(dag=None, placement=None))
+            overrides.update(sub.per_stage or {})
         runs = {name: _StageRun(
                     self.dag.stages[name],
                     _resolve_stage_config(self.config, self.dag.stages[name],

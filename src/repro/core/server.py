@@ -349,22 +349,61 @@ class PipelineServer:
                  online=None,
                  placement: dict[str, object] | None = None,
                  n_device: int = 1):
+        from .submit import deprecated
+
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
         self._arbiter_spec = arbiter
         self._arbiter_kwargs = dict(arbiter_kwargs or {})
         self._online = online
+        if placement is not None:
+            deprecated("PipelineServer(placement=...) is deprecated; pass "
+                       "Submission(placement=...) per job instead")
         self._placement = dict(placement or {})
-        self.n_device = max(1, n_device) if self._placement else 0
+        self._n_device = max(1, n_device)
+        self._queued: list = []
 
-    def serve(self, jobs: list[Job]) -> ServerResult:
-        """Admit ``jobs`` and run the pool until every job completes."""
+    def submit(self, sub) -> None:
+        """Queue one §14 Submission (or legacy Job) for the next drain."""
+        from .submit import as_submission
+
+        self._queued.append(as_submission(sub, _warn="PipelineServer.submit"))
+
+    def serve(self, jobs=None) -> ServerResult:
+        """Run the pool until every admitted job completes.
+
+        ``jobs`` is a list of §14 Submissions (legacy Job records keep
+        working one release behind a DeprecationWarning); omitted, the
+        drain takes everything queued via ``submit``. Per-submission
+        ``placement`` routes that job across substrates; a per-submission
+        ``online`` scheduler is honoured when the pool was built without
+        one (all submissions carrying one must share it).
+        """
+        from .submit import as_submission
+
+        if jobs is None:
+            subs = self._queued
+            self._queued = []
+        else:
+            subs = [as_submission(j, _warn="PipelineServer.serve")
+                    for j in jobs]
+        placement = dict(self._placement)
+        online = self._online
+        for s in subs:
+            if s.placement is not None:
+                placement[s.name] = s.placement
+            if s.online is not None:
+                if online is not None and online is not s.online:
+                    raise ValueError(
+                        f"submission {s.name!r} carries an online scheduler "
+                        "that conflicts with the pool's")
+                online = s.online
+        jobs = [s.to_job() for s in subs]
         names = [j.name for j in jobs]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate job names in {names}")
         arbiter = make_arbiter(self._arbiter_spec, **self._arbiter_kwargs)
-        online = self._online
         states = [JobState(job=j, seq=i, arrival=float(j.arrival_s))
                   for i, j in enumerate(jobs)]
         runs: dict[str, dict[str, _StageRun]] = {}
@@ -375,7 +414,7 @@ class PipelineServer:
         choices: dict[tuple[str, str], object] = {}
 
         n_workers = self.config.n_workers
-        n_device = self.n_device
+        n_device = self._n_device if placement else 0
         n_lanes = n_workers + n_device
         cond = threading.Condition()
         total_left = [0]    # outstanding tasks in BUILT stage runs
@@ -407,7 +446,7 @@ class PipelineServer:
             sr = _StageRun(stage,
                            _resolve_stage_config(self.config, stage, override),
                            self._domains)
-            pl = self._placement.get(job.name)
+            pl = placement.get(job.name)
             if pl is not None:
                 k = pl.device_rows(name, stage.n_rows)
                 shards, _ = split_device_tasks(sr, k, max(1, n_device))

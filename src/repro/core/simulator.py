@@ -466,7 +466,7 @@ def frozen_dag_makespans(
 def simulate_dag(
     dag,
     stage_costs: dict[str, np.ndarray] | None = None,
-    stage_configs: dict[str, tuple] | tuple | None = None,
+    per_stage: dict[str, tuple] | tuple | None = None,
     n_workers: int = 20,
     overheads: SimOverheads = SimOverheads(),
     seed: int = 0,
@@ -474,6 +474,7 @@ def simulate_dag(
     tile: int = 1,
     n_shards: int | None = None,
     online=None,
+    stage_configs: dict[str, tuple] | tuple | None = None,
 ) -> DagSimResult:
     """Simulate a PipelineDAG run on ``n_workers`` shared workers.
 
@@ -485,9 +486,10 @@ def simulate_dag(
     h_local for distributed ones; the locality penalty applies when a worker
     executes a chunk not contiguous with its previous range in that stage.
 
-    ``stage_configs`` maps stage name -> (technique, layout, victim) combo or
+    ``per_stage`` maps stage name -> (technique, layout, victim) combo or
     SchedulerConfig; a single combo applies to every stage; None means each
-    stage's own/dag default is STATIC/CENTRALIZED/SEQ.
+    stage's own/dag default is STATIC/CENTRALIZED/SEQ. (``stage_configs``
+    is the deprecated pre-§14 spelling of the same parameter.)
 
     ``stage_costs`` entries are per-row cost vectors. A stage without an
     entry falls back to its own ``Stage.cost_of_range`` (evaluated per row),
@@ -495,7 +497,7 @@ def simulate_dag(
 
     ``frozen`` switches to the DEVICE path (DESIGN.md §11): pass a
     DeviceDagTables to replay it, or True to freeze the DAG here with
-    ``build_dag_tables`` (techniques from ``stage_configs`` — combos or
+    ``build_dag_tables`` (techniques from ``per_stage`` — combos or
     bare technique strings — over ``n_shards`` shards, row tiles of
     ``tile``) and predict the fused-launch makespan of the Pallas walker
     instead of the host pool's.
@@ -508,13 +510,21 @@ def simulate_dag(
     deterministically. Not supported on the frozen device path (device
     tables are immutable by construction).
     """
+    if stage_configs is not None:
+        from .submit import deprecated
+
+        deprecated("simulate_dag(stage_configs=...) is deprecated; the "
+                   "parameter is named per_stage now (matching the §14 "
+                   "Submission field)")
+        if per_stage is None:
+            per_stage = stage_configs
     names = dag.stage_names
     if stage_costs is None:
         stage_costs = {}
-    if stage_configs is None:
-        stage_configs = {}
-    if isinstance(stage_configs, tuple):
-        stage_configs = {n: stage_configs for n in names}
+    if per_stage is None:
+        per_stage = {}
+    if isinstance(per_stage, tuple):
+        per_stage = {n: per_stage for n in names}
 
     if frozen is not None and frozen is not False:
         if online is not None:
@@ -526,7 +536,7 @@ def simulate_dag(
         else:
             techniques = {}
             for n in names:
-                cfg = stage_configs.get(n, "STATIC")
+                cfg = per_stage.get(n, "STATIC")
                 techniques[n] = cfg if isinstance(cfg, str) else _combo_of(cfg)[0]
             ddt = build_dag_tables(dag, tile, techniques,
                                    n_shards=n_shards or 1, seed=seed)
@@ -536,7 +546,7 @@ def simulate_dag(
     stages: dict[str, _SimStage] = {}
     for n in names:
         st = dag.stages[n]
-        combo = _combo_of(stage_configs.get(n, ("STATIC", "CENTRALIZED", "SEQ")))
+        combo = _combo_of(per_stage.get(n, ("STATIC", "CENTRALIZED", "SEQ")))
         tech, layout, _ = combo
         costs = row_costs[n]
         schedule = chunk_schedule(tech, st.n_rows, n_workers, seed=seed)
@@ -671,12 +681,16 @@ def simulate_server(
     rotating stage cursors (as in simulate_dag) — but against per-row cost
     vectors (``Job.stage_costs``, else ``Stage.cost_of_range``, else unit)
     instead of wall clocks, so arbiter policies and per-job configs can be
-    searched in milliseconds. ``jobs`` are core.server.Job records;
-    ``arbiter`` is a name in core.server.ARBITERS or an Arbiter instance
-    (instances carry accounting state — pass a name to get a fresh one).
+    searched in milliseconds. ``jobs`` are §14 Submissions or
+    core.server.Job records (both fine — this is the internal virtual-time
+    surface the auto-tuners drive with Jobs directly); ``arbiter`` is a
+    name in core.server.ARBITERS or an Arbiter instance (instances carry
+    accounting state — pass a name to get a fresh one).
     """
     from .server import JobState, ServerTaskEvent, job_stage_costs, make_arbiter
+    from .submit import Submission
 
+    jobs = [j.to_job() if isinstance(j, Submission) else j for j in jobs]
     names = [j.name for j in jobs]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate job names in {names}")

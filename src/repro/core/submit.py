@@ -1,0 +1,111 @@
+"""The unified submission surface (DESIGN.md §14).
+
+Five PRs grew three divergent entry points: ``PipelineExecutor(dag, cfg,
+per_stage=..., online=...)``, ``PipelineServer(cfg, placement={...})``
+``.serve([Job, ...])``, and ``HeteroExecutor(dag, cfg, placement,
+per_stage=...)``. Every knob that describes WHAT is being submitted —
+the DAG, its tenant/priority/deadline metadata, per-stage overrides, an
+optional placement, an optional online scheduler — now rides on ONE
+record, ``Submission``, accepted uniformly by ``PipelineExecutor.run``,
+``PipelineServer.submit`` / ``serve``, ``HeteroExecutor.run``, and the
+§14 admission front door. Constructor kwargs that described the
+submission rather than the pool keep working one release behind
+``DeprecationWarning`` (shims covered by explicit ``pytest.warns``
+tests; tier-1 runs with DeprecationWarning-as-error so no internal call
+site can regress onto them).
+
+``core.server.Job`` remains the *internal* serving record (what the
+arbiters and the virtual-time replayers account against); ``to_job()``
+is the bridge.
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+__all__ = ["Submission", "as_submission", "deprecated"]
+
+
+def deprecated(msg: str, stacklevel: int = 3) -> None:
+    """Emit the repo-standard DeprecationWarning for a legacy API surface."""
+    warnings.warn(msg, DeprecationWarning, stacklevel=stacklevel)
+
+
+@dataclass(frozen=True)
+class Submission:
+    """One unit of work for any execution surface (DESIGN.md §14).
+
+    ``dag`` may be None when the target executor was constructed with
+    the DAG already (``PipelineExecutor(dag, cfg).run(Submission())``);
+    serving surfaces require it. ``per_stage`` / ``online`` /
+    ``placement`` travel with the submission instead of the executor:
+    the same pool object can serve submissions with different overrides.
+    ``tenant``/``weight``/``priority``/``arrival_s``/``deadline_s`` are
+    the §10 serving metadata (weight drives weighted-fair sharing,
+    ``deadline_s`` is relative to arrival); ``stage_costs`` feeds
+    virtual-time replay and the §14 admission service estimator.
+    """
+
+    dag: Any = None
+    name: str = "job"
+    tenant: str = "default"
+    priority: int = 0
+    weight: float = 1.0
+    arrival_s: float = 0.0
+    deadline_s: float | None = None
+    per_stage: dict | None = field(compare=False, default=None)
+    stage_costs: dict[str, np.ndarray] | None = field(compare=False, default=None)
+    placement: Any = field(compare=False, default=None)
+    online: Any = field(compare=False, default=None)
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"submission {self.name!r}: weight must be > 0")
+        if self.deadline_s is not None and self.deadline_s < 0:
+            raise ValueError(
+                f"submission {self.name!r}: deadline_s must be >= 0")
+
+    def to_job(self):
+        """The internal core.server.Job record for this submission."""
+        from .server import Job
+
+        if self.dag is None:
+            raise ValueError(f"submission {self.name!r} carries no dag")
+        return Job(name=self.name, dag=self.dag, priority=self.priority,
+                   tenant=self.tenant, weight=self.weight,
+                   arrival_s=self.arrival_s, deadline_s=self.deadline_s,
+                   per_stage=self.per_stage, stage_costs=self.stage_costs)
+
+    def replace(self, **changes) -> "Submission":
+        """A copy with ``changes`` applied (frozen-dataclass update)."""
+        import dataclasses
+
+        return dataclasses.replace(self, **changes)
+
+
+def as_submission(item, _warn: str | None = None) -> Submission:
+    """Coerce a Submission or legacy Job into a Submission.
+
+    ``_warn`` names the calling surface; when set and ``item`` is a
+    legacy ``core.server.Job``, the conversion emits the one-release
+    DeprecationWarning for that surface.
+    """
+    if isinstance(item, Submission):
+        return item
+    from .server import Job
+
+    if isinstance(item, Job):
+        if _warn:
+            deprecated(f"passing core.server.Job records to {_warn} is "
+                       "deprecated; submit core.submit.Submission instead",
+                       stacklevel=4)
+        return Submission(dag=item.dag, name=item.name, tenant=item.tenant,
+                          priority=item.priority, weight=item.weight,
+                          arrival_s=item.arrival_s, deadline_s=item.deadline_s,
+                          per_stage=item.per_stage,
+                          stage_costs=item.stage_costs)
+    raise TypeError(f"expected Submission or Job, got {type(item).__name__}")

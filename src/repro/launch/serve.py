@@ -20,13 +20,13 @@ import argparse
 import time
 
 
-def _pipeline_jobs(scale: int = 11):
-    """A mixed multi-tenant job set: graph analytics + ML training +
+def _pipeline_submissions(scale: int = 11):
+    """A mixed multi-tenant submission set: graph analytics + ML training +
     interactive recommendations (heterogeneous stage costs, staggered
     arrivals)."""
     import numpy as np
 
-    from ..core import Job
+    from ..core import Submission
     from ..vee import linreg_dag, recommendation_dag, rmat_graph
     from ..vee.apps import cc_iteration_dag
 
@@ -37,30 +37,33 @@ def _pipeline_jobs(scale: int = 11):
                 "changed": np.full(G.n_rows, 2e-8)}
     lr_dag, _ = linreg_dag(20_000, 21)
     return [
-        Job("cc_batch", cc_iteration_dag(G, labels), tenant="graph",
-            weight=1.0, priority=0, stage_costs=cc_costs),
-        Job("linreg_train", lr_dag, tenant="ml", weight=2.0, priority=1,
-            arrival_s=0.005),
-        Job("recommend_1", recommendation_dag(4096, 64, seed=1),
-            tenant="interactive", weight=4.0, priority=2, arrival_s=0.01,
-            deadline_s=2.0),
-        Job("recommend_2", recommendation_dag(4096, 64, seed=2),
-            tenant="interactive", weight=4.0, priority=2, arrival_s=0.02,
-            deadline_s=2.0),
+        Submission(name="cc_batch", dag=cc_iteration_dag(G, labels),
+                   tenant="graph", weight=1.0, priority=0,
+                   stage_costs=cc_costs),
+        Submission(name="linreg_train", dag=lr_dag, tenant="ml", weight=2.0,
+                   priority=1, arrival_s=0.005),
+        Submission(name="recommend_1", dag=recommendation_dag(4096, 64, seed=1),
+                   tenant="interactive", weight=4.0, priority=2,
+                   arrival_s=0.01, deadline_s=2.0),
+        Submission(name="recommend_2", dag=recommendation_dag(4096, 64, seed=2),
+                   tenant="interactive", weight=4.0, priority=2,
+                   arrival_s=0.02, deadline_s=2.0),
     ]
 
 
 def serve_pipelines(args) -> None:
-    """Serve the mixed job set on one shared pool under the chosen arbiter."""
-    from ..core import PipelineServer, SchedulerConfig
+    """Serve the mixed submission set on one shared pool per arbiter."""
+    from ..core import PipelineServer, make
 
-    cfg = SchedulerConfig(technique=args.technique, queue_layout="PERCORE",
-                          n_workers=args.workers)
+    cfg = make("config", args.config, n_workers=args.workers)
     arbiters = ("fifo", "priority", "fair") if args.compare else (args.arbiter,)
     for arb in arbiters:
-        jobs = _pipeline_jobs()
-        tenant_of = {j.name: j.tenant for j in jobs}
-        res = PipelineServer(cfg, arbiter=arb).serve(jobs)
+        subs = _pipeline_submissions()
+        tenant_of = {s.name: s.tenant for s in subs}
+        server = PipelineServer(cfg, arbiter=make("arbiter", arb))
+        for s in subs:
+            server.submit(s)
+        res = server.serve()
         print(f"[serve:pipelines] arbiter={arb} jobs={len(res.jobs)} "
               f"makespan={res.makespan_s * 1e3:.1f}ms "
               f"p50={res.latency_percentile(50) * 1e3:.1f}ms "
@@ -72,6 +75,30 @@ def serve_pipelines(args) -> None:
                   f"latency={r.latency_s * 1e3:8.1f}ms "
                   f"service={r.service_s * 1e3:7.1f}ms "
                   f"tasks={r.n_tasks}{dl}", flush=True)
+
+
+def serve_openloop(args) -> None:
+    """Replay a heavy-tailed open-loop trace through the §14 front door."""
+    from ..core import (
+        AdmissionController, BatchPolicy, TokenBucket, heavy_tailed_trace,
+        replay_open_loop)
+    from ..core.online import FeedbackLog
+
+    trace = heavy_tailed_trace(args.requests, seed=3, load=args.load,
+                               n_workers=args.workers)
+    base = replay_open_loop(trace, n_workers=args.workers, arbiter="fifo")
+    fb = FeedbackLog()
+    adm = AdmissionController(
+        buckets={"etl": TokenBucket(rate=400.0, capacity=20)}, feedback=fb)
+    front = replay_open_loop(trace, n_workers=args.workers,
+                             arbiter=args.arbiter, admission=adm,
+                             batching=BatchPolicy(2e-3, 8), feedback=fb)
+    for tag, r in (("fifo baseline", base), ("front door", front)):
+        print(f"[serve:openloop] {tag}: p50={r.latency_percentile(50) * 1e3:.2f}ms "
+              f"p99={r.latency_percentile(99) * 1e3:.2f}ms "
+              f"p99.9={r.latency_percentile(99.9) * 1e3:.2f}ms "
+              f"hit={r.deadline_hit_rate():.3f} shed={r.shed_rate:.3f} "
+              f"batches={r.n_batches}", flush=True)
 
 
 def serve_lm(args) -> None:
@@ -123,7 +150,8 @@ def serve_lm(args) -> None:
 def main() -> None:
     """Entry point: dispatch to LM serving or multi-tenant pipeline serving."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["lm", "pipelines"], default="lm")
+    ap.add_argument("--mode", choices=["lm", "pipelines", "openloop"],
+                    default="lm")
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=32)
@@ -131,7 +159,12 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--technique", default="GSS",
-                    help="admission-chunk / default stage technique (11 options)")
+                    help="admission-chunk technique for --mode lm (11 options)")
+    ap.add_argument("--config", default="gss/percore",
+                    help="technique[/layout[/victim]] registry spec for "
+                         "--mode pipelines (core.make_config)")
+    ap.add_argument("--load", type=float, default=1.5,
+                    help="offered-load factor for --mode openloop")
     ap.add_argument("--arbiter", default="fair",
                     choices=["fifo", "priority", "fair"],
                     help="inter-job policy for --mode pipelines")
@@ -142,6 +175,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.mode == "pipelines":
         serve_pipelines(args)
+    elif args.mode == "openloop":
+        serve_openloop(args)
     else:
         serve_lm(args)
 

@@ -19,6 +19,7 @@ blocks; linreg's syrk/gemv are additive partial reductions over row blocks.
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import numpy as np
@@ -33,6 +34,7 @@ from ..core.dag import (
     StageDep,
 )
 from ..core.executor import SchedulerConfig
+from ..core.submit import Submission
 from .engine import VEE, PipelineResult
 from .sparse import CSRMatrix
 
@@ -186,7 +188,7 @@ def connected_components_dag(
         if tuner is not None:
             per_stage = tuner.suggest()
         dag = cc_iteration_dag(G, c)
-        res = PipelineExecutor(dag, config, per_stage).run()
+        res = PipelineExecutor(dag, config).run(Submission(per_stage=per_stage))
         if tuner is not None:
             tuner.observe(res.wall_time_s)
         history.append(res)
@@ -259,7 +261,7 @@ def linear_regression_dag(
     after the run. Returns (beta, DagResult).
     """
     dag, finalize = linreg_dag(num_rows, num_cols, lam=lam, seed=seed)
-    res = PipelineExecutor(dag, config, per_stage).run()
+    res = PipelineExecutor(dag, config).run(Submission(per_stage=per_stage))
     return finalize(res.values), res
 
 
@@ -298,7 +300,7 @@ def linear_regression_online(
     dag, finalize = linreg_dag(num_rows, num_cols, lam=lam, seed=seed)
     history: list[DagResult] = []
     for _ in range(max(1, rounds)):
-        res = PipelineExecutor(dag, config, online=online).run()
+        res = PipelineExecutor(dag, config).run(Submission(online=online))
         history.append(res)
     return finalize(history[-1].values), history, online
 
@@ -323,7 +325,7 @@ def recommendation_online(
     dag = recommendation_dag(n_users, n_items, density=density, seed=seed)
     history: list[DagResult] = []
     for _ in range(max(1, rounds)):
-        res = PipelineExecutor(dag, config, online=online).run()
+        res = PipelineExecutor(dag, config).run(Submission(online=online))
         history.append(res)
     return history[-1].values["scores"], history, online
 
@@ -378,7 +380,7 @@ def recommendation_pipeline(
     branches overlap on the shared pool). Returns (top_items, result).
     """
     dag = recommendation_dag(n_users, n_items, density=density, seed=seed)
-    res = PipelineExecutor(dag, config, per_stage).run()
+    res = PipelineExecutor(dag, config).run(Submission(per_stage=per_stage))
     return res.values["scores"], res
 
 
@@ -467,6 +469,77 @@ def run_device_dag(
                                lowering.values, rows, lowering.tile,
                                interpret=interpret)
     return {k: np.asarray(v) for k, v in out.items()}, ddt
+
+
+def merge_device_lowerings(lowerings: list[DeviceLowering]) -> DeviceLowering:
+    """Coalesce same-tile DeviceLowerings into ONE super-table launch (§14).
+
+    The front door's batching on the device path: member ``j``'s stages,
+    operands, and values are renamed ``name#j`` (the §14 batch
+    convention), bodies and host ops wrapped to see their original names,
+    and the host DAGs merged with ``core.admission.merge_dags`` — so
+    ``build_dag_tables`` freezes one super-table covering every member
+    and ``dag_walk`` drains the whole batch in one fused launch. Members
+    stay disjoint (each keeps its own operands and accumulators), so the
+    merged run is bit-equal to running each lowering alone. ``finalize``
+    returns the list of per-member finalize results;
+    ``split_device_values`` recovers per-member stage values.
+    """
+    from ..core.admission import BATCH_SEP, merge_dags
+
+    if not lowerings:
+        raise ValueError("cannot merge an empty batch of lowerings")
+    tiles = {low.tile for low in lowerings}
+    if len(tiles) != 1:
+        raise ValueError(f"cannot merge lowerings with mixed tiles {tiles}")
+
+    def _wrap_body(body):
+        def wrapped(ctx, ins, out):
+            body(ctx, {k.rsplit(BATCH_SEP, 1)[0]: v for k, v in ins.items()},
+                 out)
+        return wrapped
+
+    by_name, operands, values = {}, [], {}
+    for j, low in enumerate(lowerings):
+        for st in low.stages:
+            renamed = dataclasses.replace(
+                st, name=f"{st.name}{BATCH_SEP}{j}",
+                body=_wrap_body(st.body),
+                operands=tuple(f"{o}{BATCH_SEP}{j}" for o in st.operands),
+                reads=tuple((f"{p}{BATCH_SEP}{j}", kind)
+                            for p, kind in st.reads))
+            by_name[renamed.name] = renamed
+        for op in low.operands:
+            operands.append(dataclasses.replace(
+                op, name=f"{op.name}{BATCH_SEP}{j}"))
+        for k, v in low.values.items():
+            values[f"{k}{BATCH_SEP}{j}"] = v
+
+    merged_dag = merge_dags([low.dag for low in lowerings])
+    # build_dag_tables numbers stage ids by the merged DAG's topological
+    # order (members interleave) — the walker's stage list must match it
+    stages = [by_name[n] for n in merged_dag.stage_names]
+
+    members = list(lowerings)
+
+    def finalize(stage_values: dict) -> list:
+        per_member = split_device_values(stage_values, len(members))
+        return [low.finalize(vals) if low.finalize is not None else vals
+                for low, vals in zip(members, per_member)]
+
+    return DeviceLowering(merged_dag, stages, operands, values,
+                          lowerings[0].tile, finalize)
+
+
+def split_device_values(values: dict, n_members: int) -> list[dict]:
+    """Split merged ``name#j`` stage values back into per-member dicts."""
+    from ..core.admission import BATCH_SEP
+
+    out: list[dict] = [{} for _ in range(n_members)]
+    for name, v in values.items():
+        base, _, idx = name.rpartition(BATCH_SEP)
+        out[int(idx)][base] = v
+    return out
 
 
 def linreg_device_lowering(

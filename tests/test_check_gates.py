@@ -21,6 +21,10 @@ GOOD_ROWS = {
     "hetero_linreg_placement": (1092.4,
                                 "equal=1 host=5328.6us device=17326.2us "
                                 "vs_best=79.50% mixed_gain=79.50%"),
+    "pipeline_server_openloop": (5369.2,
+                                 "p999_fifo=37418.6us hit=0.732 hit_fifo=0.379 "
+                                 "shed=39.4% p999_gain=85.65% hit_gain=35.34% "
+                                 "equal=1"),
 }
 
 
@@ -183,6 +187,17 @@ def test_hetero_gate_requires_all_three_patterns(tmp_path):
                     "equal=1 vs_best=5.00%"):
         rows = dict(GOOD_ROWS)
         rows["hetero_linreg_placement"] = (1092.4, derived)
+        assert cg.main([write_csv(tmp_path, rows)]) == 1, derived
+
+
+def test_openloop_gate_requires_all_three_patterns(tmp_path):
+    """p999_gain / hit_gain / equal must all be present and non-negative."""
+    for derived in ("p999_gain=-0.10% hit_gain=35.34% equal=1",
+                    "p999_gain=85.65% hit_gain=-0.10% equal=1",
+                    "p999_gain=85.65% hit_gain=35.34% equal=-1",
+                    "p999_gain=85.65% hit_gain=35.34%"):
+        rows = dict(GOOD_ROWS)
+        rows["pipeline_server_openloop"] = (5369.2, derived)
         assert cg.main([write_csv(tmp_path, rows)]) == 1, derived
 
 

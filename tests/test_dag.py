@@ -28,6 +28,7 @@ from repro.core import (
     SchedulerConfig,
     Stage,
     StageDep,
+    Submission,
     select_offline_dag,
     simulate_dag,
 )
@@ -116,8 +117,8 @@ def test_exactly_once_and_dependency_order(n, p, tech_a, tech_b, layout, kind, s
     cfg = SchedulerConfig(technique=tech_a, queue_layout=layout,
                           victim_strategy="RND", n_workers=p,
                           numa_domains=domains, seed=seed)
-    res = PipelineExecutor(dag, cfg, per_stage={
-        "b": (tech_b, layout, "SEQ")}).run()
+    res = PipelineExecutor(dag, cfg).run(Submission(per_stage={
+        "b": (tech_b, layout, "SEQ")}))
 
     # exactly once: 'a' is an exact partition, 'b' counted every row once
     assert np.array_equal(res.values["a"], np.arange(n, dtype=np.int64))
@@ -188,8 +189,8 @@ def test_per_stage_configs_resolved():
     a = Stage("a", n, lambda i, s, z: np.zeros(z))
     b = Stage("b", n, lambda i, s, z: np.zeros(z))
     cfg = SchedulerConfig(technique="STATIC", n_workers=4)
-    res = PipelineExecutor(PipelineDAG([a, b]), cfg, per_stage={
-        "b": ("SS", "CENTRALIZED", "SEQ")}).run()
+    res = PipelineExecutor(PipelineDAG([a, b]), cfg).run(Submission(
+        per_stage={"b": ("SS", "CENTRALIZED", "SEQ")}))
     assert len(res.stages["a"].schedule) <= 5       # STATIC: ~1 chunk/worker
     assert len(res.stages["b"].schedule) == n       # SS: unit chunks
     assert res.stages["b"].config.technique == "SS"

@@ -23,6 +23,8 @@ from repro.core import (
     ScheduledExecutor,
     Stage,
     StageDep,
+    Submission,
+    as_submission,
     chunk_schedule,
     default_online_arms,
     replay_online_dag,
@@ -223,8 +225,8 @@ def test_executor_online_rounds_stay_correct():
     oracle = linear_regression_oracle(n, 6, seed=1)
     for layout_pin in (None, {"moments": ("MFSC", "PERCORE", "SEQ")}):
         for _ in range(3):
-            res = PipelineExecutor(dag, SchedulerConfig(n_workers=4),
-                                   per_stage=layout_pin, online=online).run()
+            res = PipelineExecutor(dag, SchedulerConfig(n_workers=4)).run(
+                Submission(per_stage=layout_pin, online=online))
             assert np.allclose(finalize(res.values), oracle)
             for name, sr in res.stages.items():
                 # realized schedule covers the stage exactly once
@@ -242,8 +244,8 @@ def test_executor_online_honours_stage_config_pin():
                  deps=(StageDep("pinned", "elementwise"),))
     dag = PipelineDAG([pinned, free])
     online = OnlineScheduler(seed=0, resize=False)
-    res = PipelineExecutor(dag, SchedulerConfig(n_workers=2),
-                           online=online).run()
+    res = PipelineExecutor(dag, SchedulerConfig(n_workers=2)).run(
+        Submission(online=online))
     assert res.stages["pinned"].config.technique == "GSS"
     assert online.selector_for("pinned").counts.sum() == 0  # never consulted
     assert online.selector_for("free").counts.sum() == 1
@@ -285,7 +287,7 @@ def test_server_online_lazy_build_and_correctness():
                          online=online)
     jobs = [make_job("j0", 0.0), make_job("j1", 0.001),
             make_job("pinned", 0.002, pin=True)]
-    res = srv.serve(jobs)
+    res = srv.serve([as_submission(j) for j in jobs])
     for name in ("j0", "j1", "pinned"):
         jr = res.jobs[name]
         assert np.array_equal(jr.values["prop"], oracle_prop)
@@ -303,7 +305,7 @@ def test_server_online_empty_job_completes():
     dag = PipelineDAG([Stage("z", 0, lambda i, s, z: None)])
     res = PipelineServer(SchedulerConfig(n_workers=2),
                          online=OnlineScheduler(seed=1)).serve(
-        [Job("empty", dag)])
+        [as_submission(Job("empty", dag))])
     assert res.jobs["empty"].finish_s == 0.0
 
 

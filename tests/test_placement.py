@@ -36,6 +36,7 @@ from repro.core import (
     Stage,
     StageDep,
     StagePlacement,
+    Submission,
     TransferModel,
     calibrate_hetero_costs,
     select_offline_hetero,
@@ -301,13 +302,13 @@ def test_server_placement_routes_to_device_lanes():
     low = recommendation_device_lowering(128, 16, tile=16, seed=0)
     ref = PipelineExecutor(low.dag, SchedulerConfig(
         technique="SS", n_workers=1)).run()
-    jobs = [Job("placed", low.dag, tenant="a"),
-            Job("hostonly", low.dag, tenant="b")]
+    subs = [Submission(name="placed", dag=low.dag, tenant="a",
+                       placement=Placement.all_device(low.dag.stage_names)),
+            Submission(name="hostonly", dag=low.dag, tenant="b")]
     srv = PipelineServer(
         SchedulerConfig(technique="SS", n_workers=2), arbiter="fair",
-        placement={"placed": Placement.all_device(low.dag.stage_names)},
         n_device=1)
-    res = srv.serve(jobs)
+    res = srv.serve(subs)
     for jname in ("placed", "hostonly"):
         for k in ref.values:
             got = np.asarray(res.jobs[jname].values[k], dtype=float)
@@ -359,9 +360,10 @@ def test_server_placement_percore_layout():
     low = recommendation_device_lowering(128, 16, tile=16, seed=2)
     srv = PipelineServer(
         SchedulerConfig(technique="SS", queue_layout="PERCORE", n_workers=2),
-        placement={"j": Placement.all_device(low.dag.stage_names)},
         n_device=2)
-    res = srv.serve([Job("j", low.dag, tenant="a")])
+    res = srv.serve([Submission(
+        name="j", dag=low.dag, tenant="a",
+        placement=Placement.all_device(low.dag.stage_names))])
     ref = PipelineExecutor(low.dag, SchedulerConfig(
         technique="SS", n_workers=1)).run()
     for k in ref.values:

@@ -31,6 +31,7 @@ from repro.core import (
     SchedulerConfig,
     Stage,
     StageDep,
+    as_submission,
     make_arbiter,
     select_offline_server,
     simulate_server,
@@ -94,7 +95,8 @@ def test_duplicate_job_names_rejected():
     with pytest.raises(ValueError, match="duplicate"):
         simulate_server(jobs, n_workers=2)
     with pytest.raises(ValueError, match="duplicate"):
-        PipelineServer(SchedulerConfig(n_workers=2)).serve(jobs)
+        PipelineServer(SchedulerConfig(n_workers=2)).serve(
+            [as_submission(j) for j in jobs])
 
 
 def test_unknown_arbiter_rejected():
@@ -160,7 +162,7 @@ def test_server_every_job_completes_exactly_once(sizes, p, arb, kind):
     ]
     srv = PipelineServer(SchedulerConfig(technique="GSS", n_workers=p),
                         arbiter=arb)
-    res = srv.serve(jobs)
+    res = srv.serve([as_submission(j) for j in jobs])
     assert set(res.jobs) == {j.name for j in jobs}
     for j, n in zip(jobs, sizes):
         r = res.jobs[j.name]
@@ -340,7 +342,8 @@ def test_server_deadline_accounting():
     jobs = [Job("fast", _chain_dag(16), deadline_s=30.0),
             Job("doomed", _chain_dag(16), deadline_s=1e-9),
             Job("nodl", _chain_dag(16))]
-    res = PipelineServer(SchedulerConfig(n_workers=2)).serve(jobs)
+    res = PipelineServer(SchedulerConfig(n_workers=2)).serve(
+        [as_submission(j) for j in jobs])
     assert res.jobs["fast"].deadline_met is True
     assert res.jobs["doomed"].deadline_met is False
     assert res.jobs["nodl"].deadline_met is None
@@ -349,7 +352,8 @@ def test_server_deadline_accounting():
 def test_server_honours_real_time_arrival():
     jobs = [Job("now", _chain_dag(32)),
             Job("later", _chain_dag(32), arrival_s=0.05)]
-    res = PipelineServer(SchedulerConfig(n_workers=2)).serve(jobs)
+    res = PipelineServer(SchedulerConfig(n_workers=2)).serve(
+        [as_submission(j) for j in jobs])
     later_first = min(e.t_start for e in res.events if e.job == "later")
     assert later_first >= 0.05
     assert res.jobs["later"].finish_s >= 0.05
@@ -360,7 +364,8 @@ def test_server_tenant_service_totals():
     jobs = [Job("a", _chain_dag(64), tenant="t1"),
             Job("b", _chain_dag(64), tenant="t1"),
             Job("c", _chain_dag(64), tenant="t2")]
-    res = PipelineServer(SchedulerConfig(n_workers=2), arbiter="fair").serve(jobs)
+    res = PipelineServer(SchedulerConfig(n_workers=2),
+                         arbiter="fair").serve([as_submission(j) for j in jobs])
     per_job = {n: r.service_s for n, r in res.jobs.items()}
     assert res.tenant_service_s["t1"] == pytest.approx(
         per_job["a"] + per_job["b"])
@@ -373,4 +378,5 @@ def test_server_op_error_propagates():
     jobs = [Job("ok", _chain_dag(16)),
             Job("bad", PipelineDAG([Stage("s", 8, boom)]))]
     with pytest.raises(RuntimeError, match="job exploded"):
-        PipelineServer(SchedulerConfig(n_workers=2)).serve(jobs)
+        PipelineServer(SchedulerConfig(n_workers=2)).serve(
+        [as_submission(j) for j in jobs])
