@@ -27,6 +27,13 @@ row must never silently pass:
                                 jobs counted as misses (hit_gain >= 0);
                                 batched device execution bit-equal to
                                 unbatched (equal=1)
+  pipeline_server_preemptive    on the deeply overloaded trace, the
+                                preemptive arbiter's deadline hit-rate >=
+                                non-preemptive weighted-fair
+                                (hit_gain >= 0); checkpoint + host<->device
+                                mid-flight migration resumes bit-equal to
+                                never-preempted runs for both the linreg
+                                and recommendation lowerings (equal=1)
   online_linreg_adaptive        the online feedback loop lands within 1.10x
                                 of the offline search (margin110 >= 0) and
                                 strictly beats the median static technique
@@ -75,6 +82,8 @@ GATES: dict[str, tuple[str, ...]] = {
     "pipeline_server_openloop": (r"p999_gain=(-?[\d.]+)%",
                                  r"hit_gain=(-?[\d.]+)%",
                                  r"equal=(-?[\d.]+)"),
+    "pipeline_server_preemptive": (r"hit_gain=(-?[\d.]+)%",
+                                   r"equal=(-?[\d.]+)"),
     "online_linreg_adaptive": (r"margin110=(-?[\d.]+)%", r"vs_median=(-?[\d.]+)%"),
     "online_resize_merge": (r"resize_gain=(-?[\d.]+)%",),
     "hetero_linreg_placement": (r"equal=(-?[\d.]+)", r"vs_best=(-?[\d.]+)%",
@@ -86,7 +95,8 @@ TOLERANCE = -1e-6  # simulator determinism should make these exact
 # simulator: byte-stable across runs, so the baseline gate holds them tight.
 DETERMINISTIC_PREFIXES = ("pipeline_dag_cc_regression",
                           "pipeline_server_mixed_load",
-                          "pipeline_server_openloop", "online_",
+                          "pipeline_server_openloop",
+                          "pipeline_server_preemptive", "online_",
                           "hetero_")
 
 # provenance keys that must match between the accepted baseline and the

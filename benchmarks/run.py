@@ -12,7 +12,9 @@ the JSON is uploaded as a CI artifact).
   pipeline_dag_*     §9 DAG runtime: per-stage tuning vs global baseline
   device_dag_*       §11 device path: fused super-table walker vs per-stage
                      launches (interpret mode)
-  pipeline_server_*  §10 serving runtime: fair-share vs FIFO on mixed jobs
+  pipeline_server_*  §10 serving runtime: fair-share vs FIFO on mixed jobs;
+                     §14 open-loop admission front door; §15 preemptive
+                     arbiter hit-rate + mid-flight migration bit-equality
   online_*           §12 runtime feedback loop: bandit-tuned makespan vs the
                      offline search and the static techniques; moldable
                      chunk-resize rescue of a mis-chunked stage
@@ -362,6 +364,64 @@ def bench_openloop(quick: bool = False) -> None:
         f"hit_gain={(hit_front - hit_base) * 100:.2f}% equal={equal}")
 
 
+def bench_preemptive(quick: bool = False) -> None:
+    """Preemptive multi-tenancy row (§15): chunk-boundary preemption on a
+    pressured open-loop trace, plus mid-flight migration bit-equality.
+
+    ``pipeline_server_preemptive`` is the CI-gated row. On a deeply
+    overloaded (load 5.0) heavy-tailed trace whose deadlines scale with
+    pool capacity, the ``preemptive`` arbiter (deadline-pressure slack
+    test wrapped around weighted-fair, victims = deadline-free or
+    already-expired jobs at the pressured jobs' priority) must achieve a
+    deadline hit-rate >= plain non-preemptive weighted-fair
+    (hit_gain >= 0). equal=1 asserts the migration protocol itself:
+    checkpoint a host run at a chunk boundary, re-lower the remainder
+    onto the device walker (and the reverse: freeze a device prefix,
+    resume on the host pool) and land bit-identical to never-preempted
+    runs — for BOTH the linreg and the recommendation lowerings.
+    """
+    import numpy as np
+
+    from repro.core import (PipelineExecutor, PreemptiveRunner,
+                            SchedulerConfig, heavy_tailed_trace,
+                            migrate_to_device, replay_open_loop,
+                            resume_on_host, run_device_prefix)
+    from repro.vee.apps import (linreg_device_lowering,
+                                recommendation_device_lowering,
+                                run_device_dag)
+
+    n_jobs = 800 if quick else 2000
+    trace = heavy_tailed_trace(n_jobs, seed=3, load=5.0, n_workers=8)
+    base = replay_open_loop(trace, n_workers=8, arbiter="fair")
+    pre = replay_open_loop(trace, n_workers=8, arbiter="preemptive",
+                           arbiter_kwargs={"inner": "fair", "n_workers": 8,
+                                           "slack_s": 0.5})
+
+    cfg = SchedulerConfig(technique="SS", queue_layout="CENTRALIZED",
+                          n_workers=1)
+    equal = 1
+    for low in (linreg_device_lowering(256, 9, tile=64),
+                recommendation_device_lowering(128, 192, tile=64)):
+        host_ref = PipelineExecutor(low.dag, cfg).run()
+        dev_ref, _ = run_device_dag(low, "SS")
+        _, ck = PreemptiveRunner(low.dag, cfg, preempt_after=2).run()
+        vals = migrate_to_device(ck, low)
+        equal &= int(all(np.array_equal(vals[k], dev_ref[k])
+                         for k in dev_ref))
+        ck2, _ = run_device_prefix(low, 2)
+        fin = resume_on_host(ck2, low.dag, cfg)
+        equal &= int(all(np.array_equal(np.asarray(fin.values[k]),
+                                        np.asarray(host_ref.values[k]))
+                         for k in host_ref.values))
+
+    hit_base = base.deadline_hit_rate()
+    hit_pre = pre.deadline_hit_rate()
+    row("pipeline_server_preemptive", pre.latency_percentile(99.9) * 1e6,
+        f"hit={hit_pre:.3f} hit_fair={hit_base:.3f} "
+        f"preemptions={len(pre.preemptions)} jobs={n_jobs} "
+        f"hit_gain={(hit_pre - hit_base) * 100:.2f}% equal={equal}")
+
+
 def bench_online(quick: bool = False) -> None:
     """Runtime feedback-loop rows (§12): the online bandit vs the offline
     search and the static techniques, in deterministic virtual time.
@@ -504,6 +564,7 @@ def main(quick: bool = False, run_id: str | None = None) -> None:
     bench_device_dag(quick=quick)
     bench_pipeline_server(quick=quick)
     bench_openloop(quick=quick)
+    bench_preemptive(quick=quick)
     bench_online(quick=quick)
     bench_hetero(quick=quick)
     if not quick:

@@ -11,7 +11,9 @@ heterogeneous placement & co-execution layer that splits pipeline DAGs
 across the host pool and the device walker (DESIGN.md §13), and the
 serving front door — open-loop admission control, same-shape batching,
 pool autoscaling — behind the unified Submission surface and string-spec
-registry (DESIGN.md §14).
+registry (DESIGN.md §14), and preemptive multi-tenancy — chunk-boundary
+checkpoint/preempt/resume with host<->device mid-flight migration and the
+deadline-pressure "preemptive" arbiter (DESIGN.md §15).
 """
 
 from .admission import (
@@ -118,6 +120,17 @@ from .partitioners import (
     chunk_sizes,
     make_partitioner,
 )
+from .preempt import (
+    JobCheckpoint,
+    PreemptableStageRun,
+    PreemptionEvent,
+    PreemptiveArbiter,
+    PreemptiveRunner,
+    StageCheckpoint,
+    migrate_to_device,
+    resume_on_host,
+    run_device_prefix,
+)
 from .queues import QUEUE_LAYOUTS, CentralizedQueue, DistributedQueues
 from .simulator import (
     DagSimResult,
@@ -172,4 +185,7 @@ __all__ = [
     "batch_signature", "merge_dags", "coalesce_submissions", "BatchPolicy",
     "AutoscalePolicy", "MemberOutcome", "OpenLoopResult", "replay_open_loop",
     "heavy_tailed_trace", "FrontDoor", "FrontDoorResult",
+    "StageCheckpoint", "JobCheckpoint", "PreemptableStageRun",
+    "PreemptiveRunner", "resume_on_host", "migrate_to_device",
+    "run_device_prefix", "PreemptionEvent", "PreemptiveArbiter",
 ]

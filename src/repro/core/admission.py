@@ -382,6 +382,7 @@ class OpenLoopResult:
     queue_wait_s: float
     pool_timeline: list[tuple[float, int]]
     worker_busy_s: list[float]
+    preemptions: list = field(default_factory=list)  # §15 PreemptionEvents
 
     @property
     def shed_rate(self) -> float:
@@ -731,7 +732,8 @@ def replay_open_loop(
         n_coalesced=n_coalesced[0], n_chunks=n_chunks[0],
         makespan_s=max(0.0, last_completion[0] - first_arrival),
         queue_wait_s=queue_wait[0], pool_timeline=pool_timeline,
-        worker_busy_s=busy)
+        worker_busy_s=busy,
+        preemptions=list(getattr(arb, "preemption_log", [])))
 
 
 # ---------------------------------------------------------------------------
@@ -854,12 +856,12 @@ class FrontDoor:
 
     def submit(self, sub) -> None:
         """Queue one Submission (or legacy Job) for the next ``serve``."""
-        self._queued.append(as_submission(sub, _warn="FrontDoor.submit"))
+        self._queued.append(as_submission(sub, surface="FrontDoor.submit"))
 
     def serve(self, subs=None) -> FrontDoorResult:
         """Drain queued (or given) submissions through the front door."""
         items = self._queued if subs is None else [
-            as_submission(s, _warn="FrontDoor.serve") for s in subs]
+            as_submission(s, surface="FrontDoor.serve") for s in subs]
         self._queued = []
         subs = sorted(items, key=lambda s: s.arrival_s)
         shed: dict[str, str] = {}

@@ -415,13 +415,14 @@ class PipelineExecutor:
     """Run a PipelineDAG on one shared worker pool with streaming.
 
     ``config`` supplies the pool shape (n_workers, numa_domains, seed) and
-    the default scheduling tuple. ``per_stage`` overrides the tuple per
-    stage: values may be SchedulerConfig or a (technique, layout, victim)
-    combo as produced by the auto-tuners; ``Stage.config`` takes precedence
-    over the default but below ``per_stage``.
+    the default scheduling tuple. ``run(Submission(per_stage=...))``
+    overrides the tuple per stage: values may be SchedulerConfig or a
+    (technique, layout, victim) combo as produced by the auto-tuners;
+    ``Stage.config`` takes precedence over the default but below
+    ``per_stage``.
 
-    ``online`` (a core.online.OnlineScheduler) closes the feedback loop:
-    stages without an explicit ``per_stage`` override play the combo the
+    ``Submission.online`` (a core.online.OnlineScheduler) closes the
+    feedback loop: stages without an explicit ``per_stage`` override play the
     stage's bandit suggests for this run, every completed chunk streams
     into the online feedback log, the unpopped remainder of a stage is
     re-chunked mid-run when the scheduler's moldable resizer asks for it,
@@ -430,27 +431,11 @@ class PipelineExecutor:
     converge onto the best observed configuration.
     """
 
-    def __init__(
-        self,
-        dag: PipelineDAG,
-        config: SchedulerConfig,
-        per_stage: dict[str, SchedulerConfig | tuple[str, str, str]] | None = None,
-        online=None,
-    ):
-        from .submit import deprecated
-
+    def __init__(self, dag: PipelineDAG, config: SchedulerConfig):
         self.dag = dag
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
-        if per_stage is not None:
-            deprecated("PipelineExecutor(per_stage=...) is deprecated; pass "
-                       "run(Submission(per_stage=...)) instead")
-        if online is not None:
-            deprecated("PipelineExecutor(online=...) is deprecated; pass "
-                       "run(Submission(online=...)) instead")
-        self._per_stage = dict(per_stage or {})
-        self._online = online
 
     def run(self, sub=None) -> DagResult:
         """Execute every stage to completion on the shared pool.
@@ -458,8 +443,7 @@ class PipelineExecutor:
         ``sub`` (a §14 ``Submission``) carries the per-submission knobs:
         ``sub.dag`` (when set) replaces the constructor DAG for this run,
         ``sub.per_stage`` the per-stage overrides, ``sub.online`` the
-        online scheduler. The deprecated constructor kwargs keep working
-        one release behind a DeprecationWarning.
+        online scheduler.
         """
         if sub is not None:
             from .submit import as_submission
@@ -468,13 +452,8 @@ class PipelineExecutor:
             if sub.dag is not None and sub.dag is not self.dag:
                 return PipelineExecutor(sub.dag, self.config).run(
                     sub.replace(dag=None))
-            online = sub.online if sub.online is not None else self._online
-            overrides = dict(self._per_stage)
-            overrides.update(sub.per_stage or {})
-        else:
-            online = self._online
-            overrides = dict(self._per_stage)
-        return self._run(overrides, online)
+            return self._run(dict(sub.per_stage or {}), sub.online)
+        return self._run({}, None)
 
     def _run(self, overrides: dict, online) -> DagResult:
         """The §7 execution loop with resolved overrides/online scheduler."""

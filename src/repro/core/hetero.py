@@ -201,7 +201,7 @@ class HeteroExecutor:
     """Run a PipelineDAG across the host pool AND device walker lanes.
 
     ``config`` shapes the host side exactly as in PipelineExecutor
-    (``per_stage`` overrides included); ``placement`` (a
+    (``Submission.per_stage`` overrides included); ``placement`` (a
     core.placement.Placement) assigns each stage HOST, DEVICE, or
     SPLIT(fraction) — the device owning the leading rows. ``n_device``
     walker lanes drain the device ranges in super-table order; with
@@ -215,21 +215,14 @@ class HeteroExecutor:
         dag: PipelineDAG,
         config: SchedulerConfig,
         placement: Placement,
-        per_stage: dict[str, SchedulerConfig | tuple[str, str, str]] | None = None,
         n_device: int = 1,
         rebalance: bool = True,
     ):
-        from .submit import deprecated
-
         self.dag = dag
         self.config = config
         self.placement = placement
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
-        if per_stage is not None:
-            deprecated("HeteroExecutor(per_stage=...) is deprecated; pass "
-                       "run(Submission(per_stage=...)) instead")
-        self._per_stage = dict(per_stage or {})
         self.n_device = max(1, n_device)
         self.rebalance = rebalance
 
@@ -238,10 +231,31 @@ class HeteroExecutor:
 
         ``sub`` (a §14 ``Submission``) may carry per-submission knobs:
         ``sub.dag`` replaces the constructor DAG for this run,
-        ``sub.per_stage`` layers on top of any constructor overrides, and
+        ``sub.per_stage`` supplies per-stage overrides, and
         ``sub.placement`` replaces the constructor placement.
         """
-        overrides = dict(self._per_stage)
+        res, _ck = self._run(sub, preempt_after=None)
+        return res
+
+    def run_preemptible(self, preempt_after: int, sub=None):
+        """Run until ``preempt_after`` chunks have folded, then checkpoint.
+
+        The §15 eviction protocol on the co-execution pool: once the
+        count is reached, host workers and device lanes stop *popping*
+        but finish the chunk they hold (chunk-boundary semantics), and
+        the unpopped remainder — host queues AND device shard deques —
+        freezes into a ``core.preempt.JobCheckpoint``. Returns
+        ``(HeteroResult, None)`` when the run drains first, else
+        ``(None, checkpoint)``; ``core.preempt.resume_on_host`` (or a
+        fresh device lowering) continues it bit-equal, because the sum
+        fold here is already the ascending-prefix association the
+        checkpoint format requires.
+        """
+        return self._run(sub, preempt_after=int(preempt_after))
+
+    def _run(self, sub, preempt_after: int | None):
+        """Shared body of run/run_preemptible."""
+        overrides = {}
         if sub is not None:
             from .submit import as_submission
 
@@ -254,7 +268,8 @@ class HeteroExecutor:
                     sub.placement if sub.placement is not None
                     else self.placement,
                     n_device=self.n_device, rebalance=self.rebalance)
-                return ex.run(sub.replace(dag=None, placement=None))
+                return ex._run(sub.replace(dag=None, placement=None),
+                               preempt_after)
             overrides.update(sub.per_stage or {})
         runs = {name: _StageRun(
                     self.dag.stages[name],
@@ -298,6 +313,8 @@ class HeteroExecutor:
         steals = [0]
         absorbed = [0, 0]   # [by_host, by_device]
         cross: dict[str, int] = {}
+        n_done = [0]
+        stop = [False]      # §15: lanes stop popping at the next boundary
         t0_run = time.perf_counter()
 
         def consumed_cross(sr: _StageRun, task, is_dev: bool) -> bool:
@@ -346,6 +363,10 @@ class HeteroExecutor:
             busy[lane] += dt
             ntasks[lane] += 1
             steals[0] += int(stolen)
+            n_done[0] += 1
+            if (preempt_after is not None and not stop[0]
+                    and remaining_total > 0 and n_done[0] >= preempt_after):
+                stop[0] = True
 
         def pick(lane: int, is_dev: bool, cursor: int):
             """Next (run, task, stolen, absorbed, cursor, remaining-delta)
@@ -408,7 +429,7 @@ class HeteroExecutor:
                     t_idle = time.perf_counter()
                     with cond:
                         while True:
-                            if errors or remaining_total == 0:
+                            if errors or stop[0] or remaining_total == 0:
                                 return
                             got = pick(lane, is_dev, cursor)
                             if got is not None:
@@ -446,16 +467,47 @@ class HeteroExecutor:
             raise errors[0]
         wall = time.perf_counter() - t0_run
 
+        if stop[0] and remaining_total > 0:
+            from .preempt import JobCheckpoint, StageCheckpoint
+
+            stages_ck = {}
+            for name in self.dag.order:
+                sr = runs[name]
+                pend = list(sr.pending_chunks())
+                for dq in device_qs[name]:
+                    pend.extend((int(s), int(z)) for _i, s, z in dq)
+                state = sum_state.get(name)
+                if state is not None:
+                    acc, nxt, parts = state
+                    parts_t = tuple((int(s), int(z), v)
+                                    for s, (v, z) in sorted(parts.items()))
+                else:
+                    acc, nxt, parts_t = None, 0, ()
+                stages_ck[name] = StageCheckpoint(
+                    stage=name, n_rows=int(sr.stage.n_rows),
+                    combine=sr.stage.combine,
+                    pending=tuple(sorted(pend)),
+                    row_done=sr.row_done.copy(),
+                    out=None if sr.out is None else sr.out.copy(),
+                    acc=acc, acc_next=int(nxt), parts=parts_t,
+                    executed=int(sr.executed.sum()))
+            ck = JobCheckpoint(job="hetero", stages=stages_ck,
+                               substrate="hetero", taken_at=wall,
+                               reason="preempt_after")
+            ck.validate(self.dag)
+            return None, ck
+
         stage_results = {
             name: StageResult(value=sr.value, schedule=sr.schedule,
                               per_task_costs=sr.costs, config=sr.cfg,
                               t_first=sr.t_first, t_last=sr.t_last)
             for name, sr in runs.items()
         }
-        return HeteroResult(
+        res = HeteroResult(
             values={n: r.value for n, r in stage_results.items()},
             stages=stage_results, events=events, wall_time_s=wall,
             steals=steals[0], per_worker_busy_s=busy, per_worker_tasks=ntasks,
             n_host_workers=n_workers, n_device=n_device,
             absorbed_by_host=absorbed[0], absorbed_by_device=absorbed[1],
             cross_consumptions=cross, placement=self.placement)
+        return res, None

@@ -131,6 +131,7 @@ class JobState:
     boosted: bool = False          # starvation guard fired at the last order
     done: bool = False
     finish: float | None = None
+    preempted: bool = False        # parked by a §15 preemptive arbiter
 
 
 class Arbiter:
@@ -249,6 +250,10 @@ def make_arbiter(spec: str | Arbiter, **kwargs) -> Arbiter:
     """
     if isinstance(spec, Arbiter):
         return spec
+    if spec.lower() not in ARBITERS:
+        from . import preempt  # noqa: F401  registers "preemptive" (§15)
+
+        del preempt
     try:
         return ARBITERS[spec.lower()](**kwargs)
     except KeyError:
@@ -299,6 +304,7 @@ class ServerResult:
     per_worker_tasks: list[int]
     steals: int
     tenant_service_s: dict[str, float]
+    preemptions: list = field(default_factory=list)  # §15 PreemptionEvents
 
     def latencies(self) -> dict[str, float]:
         """Job name -> latency (finish minus arrival) in seconds."""
@@ -332,7 +338,7 @@ class PipelineServer:
     feedback log and stage remainders resize mid-run exactly as in
     PipelineExecutor.
 
-    ``placement`` (job name -> core.placement.Placement) routes each
+    ``Submission.placement`` (a core.placement.Placement) routes that
     job's stages across the substrates under contention (§13): a stage's
     device rows are carved into shard deques drained by ``n_device``
     walker lanes shared by ALL jobs (arbiter order decides whose device
@@ -347,38 +353,30 @@ class PipelineServer:
                  arbiter: str | Arbiter = "fair",
                  arbiter_kwargs: dict | None = None,
                  online=None,
-                 placement: dict[str, object] | None = None,
                  n_device: int = 1):
-        from .submit import deprecated
-
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
         self._arbiter_spec = arbiter
         self._arbiter_kwargs = dict(arbiter_kwargs or {})
         self._online = online
-        if placement is not None:
-            deprecated("PipelineServer(placement=...) is deprecated; pass "
-                       "Submission(placement=...) per job instead")
-        self._placement = dict(placement or {})
         self._n_device = max(1, n_device)
         self._queued: list = []
 
     def submit(self, sub) -> None:
-        """Queue one §14 Submission (or legacy Job) for the next drain."""
+        """Queue one §14 Submission for the next drain."""
         from .submit import as_submission
 
-        self._queued.append(as_submission(sub, _warn="PipelineServer.submit"))
+        self._queued.append(as_submission(sub, surface="PipelineServer.submit"))
 
     def serve(self, jobs=None) -> ServerResult:
         """Run the pool until every admitted job completes.
 
-        ``jobs`` is a list of §14 Submissions (legacy Job records keep
-        working one release behind a DeprecationWarning); omitted, the
-        drain takes everything queued via ``submit``. Per-submission
-        ``placement`` routes that job across substrates; a per-submission
-        ``online`` scheduler is honoured when the pool was built without
-        one (all submissions carrying one must share it).
+        ``jobs`` is a list of §14 Submissions; omitted, the drain takes
+        everything queued via ``submit``. Per-submission ``placement``
+        routes that job across substrates; a per-submission ``online``
+        scheduler is honoured when the pool was built without one (all
+        submissions carrying one must share it).
         """
         from .submit import as_submission
 
@@ -386,9 +384,9 @@ class PipelineServer:
             subs = self._queued
             self._queued = []
         else:
-            subs = [as_submission(j, _warn="PipelineServer.serve")
+            subs = [as_submission(j, surface="PipelineServer.serve")
                     for j in jobs]
-        placement = dict(self._placement)
+        placement = {}
         online = self._online
         for s in subs:
             if s.placement is not None:
@@ -674,7 +672,8 @@ class PipelineServer:
             jobs=results, events=events, wall_time_s=wall,
             makespan_s=(max(finishes) - min(arrivals)) if states else 0.0,
             per_worker_busy_s=busy, per_worker_tasks=ntasks,
-            steals=steals[0], tenant_service_s=tenant_service)
+            steals=steals[0], tenant_service_s=tenant_service,
+            preemptions=list(getattr(arbiter, "preemption_log", [])))
 
     @staticmethod
     def _record(js, sr, task, value, rel0, rel1, wid, stolen, boosted,

@@ -474,7 +474,6 @@ def simulate_dag(
     tile: int = 1,
     n_shards: int | None = None,
     online=None,
-    stage_configs: dict[str, tuple] | tuple | None = None,
 ) -> DagSimResult:
     """Simulate a PipelineDAG run on ``n_workers`` shared workers.
 
@@ -488,8 +487,7 @@ def simulate_dag(
 
     ``per_stage`` maps stage name -> (technique, layout, victim) combo or
     SchedulerConfig; a single combo applies to every stage; None means each
-    stage's own/dag default is STATIC/CENTRALIZED/SEQ. (``stage_configs``
-    is the deprecated pre-§14 spelling of the same parameter.)
+    stage's own/dag default is STATIC/CENTRALIZED/SEQ.
 
     ``stage_costs`` entries are per-row cost vectors. A stage without an
     entry falls back to its own ``Stage.cost_of_range`` (evaluated per row),
@@ -510,14 +508,6 @@ def simulate_dag(
     deterministically. Not supported on the frozen device path (device
     tables are immutable by construction).
     """
-    if stage_configs is not None:
-        from .submit import deprecated
-
-        deprecated("simulate_dag(stage_configs=...) is deprecated; the "
-                   "parameter is named per_stage now (matching the §14 "
-                   "Submission field)")
-        if per_stage is None:
-            per_stage = stage_configs
     names = dag.stage_names
     if stage_costs is None:
         stage_costs = {}
@@ -655,6 +645,7 @@ class ServerSimResult:
     per_worker_busy: list[float]
     events: list
     queue_wait: float = 0.0
+    preemptions: list = field(default_factory=list)  # §15 PreemptionEvents
 
     def latencies(self) -> dict[str, float]:
         """Job name -> latency in virtual seconds."""
@@ -686,6 +677,12 @@ def simulate_server(
     surface the auto-tuners drive with Jobs directly); ``arbiter`` is a
     name in core.server.ARBITERS or an Arbiter instance (instances carry
     accounting state — pass a name to get a fresh one).
+
+    The §15 ``"preemptive"`` arbiter replays here too: park/resume
+    decisions happen at the same chunk boundaries the threaded server
+    sees (every ``order`` call), so preemption policies are tunable
+    offline; the virtual-time ``PreemptionEvent`` log lands in
+    ``ServerSimResult.preemptions``.
     """
     from .server import JobState, ServerTaskEvent, job_stage_costs, make_arbiter
     from .submit import Submission
@@ -821,4 +818,5 @@ def simulate_server(
         job_latency={n: finishes[n] - a for n, a in
                      zip([js.job.name for js in states], arrivals)},
         tenant_service=tenant_service, per_worker_busy=busy,
-        events=events, queue_wait=queue_wait)
+        events=events, queue_wait=queue_wait,
+        preemptions=list(getattr(arb, "preemption_log", [])))

@@ -8,11 +8,11 @@ the DAG, its tenant/priority/deadline metadata, per-stage overrides, an
 optional placement, an optional online scheduler — now rides on ONE
 record, ``Submission``, accepted uniformly by ``PipelineExecutor.run``,
 ``PipelineServer.submit`` / ``serve``, ``HeteroExecutor.run``, and the
-§14 admission front door. Constructor kwargs that described the
-submission rather than the pool keep working one release behind
-``DeprecationWarning`` (shims covered by explicit ``pytest.warns``
-tests; tier-1 runs with DeprecationWarning-as-error so no internal call
-site can regress onto them).
+§14 admission front door. The pre-§14 constructor-kwarg spellings spent
+one release behind ``DeprecationWarning`` and are now gone: public
+surfaces reject legacy ``core.server.Job`` records with a ``TypeError``
+naming the replacement (tier-1 runs DeprecationWarning-as-error, so no
+internal call site could have lingered on the shims).
 
 ``core.server.Job`` remains the *internal* serving record (what the
 arbiters and the virtual-time replayers account against); ``to_job()``
@@ -21,18 +21,12 @@ is the bridge.
 
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 from typing import Any
 
 import numpy as np
 
-__all__ = ["Submission", "as_submission", "deprecated"]
-
-
-def deprecated(msg: str, stacklevel: int = 3) -> None:
-    """Emit the repo-standard DeprecationWarning for a legacy API surface."""
-    warnings.warn(msg, DeprecationWarning, stacklevel=stacklevel)
+__all__ = ["Submission", "as_submission"]
 
 
 @dataclass(frozen=True)
@@ -87,22 +81,26 @@ class Submission:
         return dataclasses.replace(self, **changes)
 
 
-def as_submission(item, _warn: str | None = None) -> Submission:
-    """Coerce a Submission or legacy Job into a Submission.
+def as_submission(item, surface: str | None = None) -> Submission:
+    """Coerce ``item`` into a Submission.
 
-    ``_warn`` names the calling surface; when set and ``item`` is a
-    legacy ``core.server.Job``, the conversion emits the one-release
-    DeprecationWarning for that surface.
+    ``surface`` names a *public* calling surface: there, legacy
+    ``core.server.Job`` records are rejected with a TypeError naming the
+    replacement (their one-release DeprecationWarning grace period is
+    over). Internal surfaces (``surface=None`` — e.g. the virtual-time
+    replayers round-tripping their own Job records) keep the silent
+    Job -> Submission coercion.
     """
     if isinstance(item, Submission):
         return item
     from .server import Job
 
     if isinstance(item, Job):
-        if _warn:
-            deprecated(f"passing core.server.Job records to {_warn} is "
-                       "deprecated; submit core.submit.Submission instead",
-                       stacklevel=4)
+        if surface:
+            raise TypeError(
+                f"{surface} no longer accepts core.server.Job records "
+                "(the pre-§14 shim's grace period is over); pass a "
+                "core.submit.Submission instead")
         return Submission(dag=item.dag, name=item.name, tenant=item.tenant,
                           priority=item.priority, weight=item.weight,
                           arrival_s=item.arrival_s, deadline_s=item.deadline_s,

@@ -51,20 +51,34 @@ def _pipeline_submissions(scale: int = 11):
     ]
 
 
+def _make_serving_arbiter(spec: str, args):
+    """Resolve an --arbiter spec; ``preemptive`` wraps weighted-fair with
+    the pool size and slack from the command line (DESIGN.md §15)."""
+    from ..core import make_arbiter
+
+    if spec == "preemptive":
+        return make_arbiter("preemptive", inner="fair",
+                            n_workers=args.workers, slack_s=args.slack)
+    return make_arbiter(spec)
+
+
 def serve_pipelines(args) -> None:
     """Serve the mixed submission set on one shared pool per arbiter."""
     from ..core import PipelineServer, make
 
     cfg = make("config", args.config, n_workers=args.workers)
-    arbiters = ("fifo", "priority", "fair") if args.compare else (args.arbiter,)
+    arbiters = (("fifo", "priority", "fair", "preemptive") if args.compare
+                else (args.arbiter,))
     for arb in arbiters:
         subs = _pipeline_submissions()
         tenant_of = {s.name: s.tenant for s in subs}
-        server = PipelineServer(cfg, arbiter=make("arbiter", arb))
+        server = PipelineServer(cfg, arbiter=_make_serving_arbiter(arb, args))
         for s in subs:
             server.submit(s)
         res = server.serve()
-        print(f"[serve:pipelines] arbiter={arb} jobs={len(res.jobs)} "
+        preempt = (f" preemptions={len(res.preemptions)}"
+                   if arb == "preemptive" else "")
+        print(f"[serve:pipelines] arbiter={arb} jobs={len(res.jobs)}{preempt} "
               f"makespan={res.makespan_s * 1e3:.1f}ms "
               f"p50={res.latency_percentile(50) * 1e3:.1f}ms "
               f"p99={res.latency_percentile(99) * 1e3:.1f}ms", flush=True)
@@ -90,15 +104,20 @@ def serve_openloop(args) -> None:
     fb = FeedbackLog()
     adm = AdmissionController(
         buckets={"etl": TokenBucket(rate=400.0, capacity=20)}, feedback=fb)
+    kwargs = ({"inner": "fair", "n_workers": args.workers,
+               "slack_s": args.slack}
+              if args.arbiter == "preemptive" else None)
     front = replay_open_loop(trace, n_workers=args.workers,
-                             arbiter=args.arbiter, admission=adm,
+                             arbiter=args.arbiter, arbiter_kwargs=kwargs,
+                             admission=adm,
                              batching=BatchPolicy(2e-3, 8), feedback=fb)
     for tag, r in (("fifo baseline", base), ("front door", front)):
+        preempt = f" preemptions={len(r.preemptions)}" if r.preemptions else ""
         print(f"[serve:openloop] {tag}: p50={r.latency_percentile(50) * 1e3:.2f}ms "
               f"p99={r.latency_percentile(99) * 1e3:.2f}ms "
               f"p99.9={r.latency_percentile(99.9) * 1e3:.2f}ms "
               f"hit={r.deadline_hit_rate():.3f} shed={r.shed_rate:.3f} "
-              f"batches={r.n_batches}", flush=True)
+              f"batches={r.n_batches}{preempt}", flush=True)
 
 
 def serve_lm(args) -> None:
@@ -166,12 +185,14 @@ def main() -> None:
     ap.add_argument("--load", type=float, default=1.5,
                     help="offered-load factor for --mode openloop")
     ap.add_argument("--arbiter", default="fair",
-                    choices=["fifo", "priority", "fair"],
-                    help="inter-job policy for --mode pipelines")
+                    choices=["fifo", "priority", "fair", "preemptive"],
+                    help="inter-job policy for --mode pipelines/openloop")
+    ap.add_argument("--slack", type=float, default=0.5,
+                    help="deadline-pressure slack (s) for --arbiter preemptive")
     ap.add_argument("--workers", type=int, default=4,
                     help="shared pool size for --mode pipelines")
     ap.add_argument("--compare", action="store_true",
-                    help="pipelines mode: run all three arbiters")
+                    help="pipelines mode: run all four arbiters")
     args = ap.parse_args()
     if args.mode == "pipelines":
         serve_pipelines(args)

@@ -48,6 +48,7 @@ __all__ = [
     "linear_regression_device", "recommendation_device_lowering",
     "recommendation_device", "linear_regression_hetero",
     "recommendation_hetero", "hetero_affinity_dag",
+    "linear_regression_migrated", "recommendation_migrated",
 ]
 
 
@@ -831,6 +832,77 @@ def _run_hetero(low: DeviceLowering, config, placement, costs,
                               queue_layout="CENTRALIZED")
     res = HeteroExecutor(low.dag, cfg, placement, n_device=n_device).run()
     return res.values, res, placement
+
+
+def _run_migrated(low: DeviceLowering, cut: int, direction: str,
+                  interpret: bool = True) -> dict:
+    """Run ``low`` with one mid-flight substrate migration at chunk ``cut``.
+
+    ``host_to_device`` starts the tile-unit DAG on the host pool
+    (technique pinned to SS / one worker — the bit-equality regime),
+    preempts after ``cut`` chunks, and re-lowers the checkpointed
+    remainder onto the device walker. ``device_to_host`` drains ``cut``
+    super-table slots on the walker, freezes the rest, and finishes on
+    the host pool. Either way the values are bit-equal to a
+    never-preempted run (DESIGN.md §15). Returns row-space values.
+    """
+    from ..core.preempt import (PreemptiveRunner, migrate_to_device,
+                                resume_on_host, run_device_prefix)
+
+    cfg = dataclasses.replace(SchedulerConfig(), technique="SS",
+                              queue_layout="CENTRALIZED", n_workers=1)
+    if direction == "host_to_device":
+        res, ck = PreemptiveRunner(low.dag, cfg, preempt_after=cut).run()
+        if ck is None:
+            return {k: np.asarray(v) for k, v in res.values.items()}
+        return migrate_to_device(ck, low, interpret=interpret)
+    if direction == "device_to_host":
+        ck, _ = run_device_prefix(low, cut, interpret=interpret)
+        fin = resume_on_host(ck, low.dag, cfg)
+        return {k: np.asarray(v) for k, v in fin.values.items()}
+    raise ValueError(f"unknown migration direction {direction!r}; expected "
+                     "'host_to_device' or 'device_to_host'")
+
+
+def linear_regression_migrated(
+    num_rows: int,
+    num_cols: int,
+    cut: int,
+    direction: str = "host_to_device",
+    tile: int = 64,
+    lam: float = 0.001,
+    seed: int = 1,
+    interpret: bool = True,
+) -> np.ndarray:
+    """Listing 2 with a mid-flight substrate migration; returns beta.
+
+    Convenience wrapper over ``_run_migrated`` for the linreg lowering —
+    the beta is bit-equal to both ``linear_regression_device`` and the
+    host-only executor, whichever substrate the job started on.
+    """
+    low = linreg_device_lowering(num_rows, num_cols, tile=tile, lam=lam,
+                                 seed=seed)
+    return low.finalize(_run_migrated(low, cut, direction, interpret))
+
+
+def recommendation_migrated(
+    n_users: int,
+    n_items: int,
+    cut: int,
+    direction: str = "host_to_device",
+    tile: int = 64,
+    density: float = 0.3,
+    seed: int = 0,
+    interpret: bool = True,
+) -> np.ndarray:
+    """The recommendation pipeline with one mid-flight migration.
+
+    Returns the scores in row space, bit-equal to the unmigrated runs.
+    """
+    low = recommendation_device_lowering(n_users, n_items, tile=tile,
+                                         density=density, seed=seed)
+    values = _run_migrated(low, cut, direction, interpret)
+    return np.asarray(values["scores"]).reshape(-1)
 
 
 def linear_regression_hetero(

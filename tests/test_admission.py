@@ -345,7 +345,7 @@ def test_registry_dispatch():
 
 
 # ---------------------------------------------------------------------------
-# the unified Submission surface + deprecation shims
+# the unified Submission surface
 # ---------------------------------------------------------------------------
 
 def test_submission_roundtrip_and_validation():
@@ -375,39 +375,34 @@ def test_submission_accepted_by_every_surface():
     assert "u" in r3.job_finish
 
 
-def test_deprecated_shims_warn_and_still_work():
+def test_retired_shims_fail_loudly():
+    """The pre-§14 grace period is over: Job records are rejected on the
+    public surfaces (with a pointer to Submission), and the retired ctor
+    keywords are plain TypeErrors — not silent kwargs swallowed by **kw."""
     sub = _two_stage(name="d")
     dag, cfg = sub.dag, SchedulerConfig(n_workers=2)
-    with pytest.warns(DeprecationWarning, match="per_stage"):
+    with pytest.raises(TypeError, match="per_stage"):
         PipelineExecutor(dag, cfg, per_stage={"a": ("SS", "CENTRALIZED", "SEQ")})
-    from repro.core import OnlineScheduler
-
-    with pytest.warns(DeprecationWarning, match="online"):
-        PipelineExecutor(dag, cfg, online=OnlineScheduler(seed=0))
-    with pytest.warns(DeprecationWarning, match="placement"):
+    with pytest.raises(TypeError, match="online"):
+        PipelineExecutor(dag, cfg, online=object())
+    with pytest.raises(TypeError, match="placement"):
         PipelineServer(cfg, placement={})
-    with pytest.warns(DeprecationWarning, match="Submission instead"):
-        res = PipelineServer(cfg).serve([sub.to_job()])
-    assert res.jobs["d"].values["b"] == int(np.arange(32).sum())
-    with pytest.warns(DeprecationWarning, match="Submission instead"):
+    with pytest.raises(TypeError, match="Submission instead"):
+        PipelineServer(cfg).serve([sub.to_job()])
+    with pytest.raises(TypeError, match="Submission instead"):
         PipelineServer(cfg).submit(sub.to_job())
-    with pytest.warns(DeprecationWarning, match="per_stage"):
-        r = simulate_dag(dag, stage_costs=sub.stage_costs,
-                         stage_configs=("SS", "CENTRALIZED", "SEQ"),
-                         n_workers=2)
-    assert r.makespan > 0
+    with pytest.raises(TypeError, match="stage_configs"):
+        simulate_dag(dag, stage_costs=sub.stage_costs,
+                     stage_configs=("SS", "CENTRALIZED", "SEQ"), n_workers=2)
 
 
-def test_hetero_executor_shim_and_submission_override():
+def test_hetero_submission_override():
     from repro.core import HeteroExecutor, Placement
     from repro.vee.apps import linreg_device_lowering
 
     low = linreg_device_lowering(128, 9, tile=64)
     cfg = SchedulerConfig(technique="SS", n_workers=1)
     host = Placement.all_host(low.dag.stage_names)
-    with pytest.warns(DeprecationWarning, match="per_stage"):
-        HeteroExecutor(low.dag, cfg, host,
-                       per_stage={"moments": ("SS", "CENTRALIZED", "SEQ")})
     ref = PipelineExecutor(low.dag, cfg).run()
     ex = HeteroExecutor(low.dag, cfg, host)
     res = ex.run(Submission(

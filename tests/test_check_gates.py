@@ -25,6 +25,9 @@ GOOD_ROWS = {
                                  "p999_fifo=37418.6us hit=0.732 hit_fifo=0.379 "
                                  "shed=39.4% p999_gain=85.65% hit_gain=35.34% "
                                  "equal=1"),
+    "pipeline_server_preemptive": (89966.8,
+                                   "hit=0.930 hit_fair=0.435 preemptions=638 "
+                                   "jobs=800 hit_gain=49.51% equal=1"),
 }
 
 
