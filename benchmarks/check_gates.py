@@ -47,6 +47,21 @@ row must never silently pass:
                                 and its mixed placement beats both
                                 homogeneous runs on the transfer-heavy
                                 synthetic DAG (mixed_gain >= 0)
+  sched_overhead_per_task       slot-array pop and steal each stay >= 5x
+                                cheaper than the deque reference
+                                (pop_margin5 >= 0, steal_margin5 >= 0)
+                                AND under an absolute per-op ceiling
+                                (max_us gates) so the hot path can't creep
+                                back toward deque-like costs
+  device_dag_relower_cache      repeat jobs of one DAG shape hit the
+                                lowering memo and the device-resident
+                                table cache (hit_margin >= 0) and cached
+                                runs stay bit-equal to cold runs (equal=1)
+
+Gate kinds: a plain pattern string asserts its captured value >= 0; a
+``("max_us", pattern, ceiling)`` entry asserts the captured value <=
+ceiling — the absolute-ceiling form overhead microcosts use, where
+"didn't regress relative to a co-measured baseline" is not enough.
 
 Baseline mode (``--against-baseline``) is the bench-history regression
 gate: ``benchmarks/baseline.json`` holds the last ACCEPTED us_per_call per
@@ -75,7 +90,9 @@ import re
 import sys
 from pathlib import Path
 
-GATES: dict[str, tuple[str, ...]] = {
+# a gate entry is a pattern string (captured value must be >= 0) or a
+# ("max_us", pattern, ceiling) tuple (captured value must be <= ceiling)
+GATES: dict[str, tuple] = {
     "pipeline_dag_cc_regression": (r"gain=(-?[\d.]+)%",),
     "device_dag_linreg": (r"equal=(-?[\d.]+)", r"sim_gain=(-?[\d.]+)%"),
     "pipeline_server_mixed_load": (r"p99_gain=(-?[\d.]+)%",),
@@ -88,6 +105,12 @@ GATES: dict[str, tuple[str, ...]] = {
     "online_resize_merge": (r"resize_gain=(-?[\d.]+)%",),
     "hetero_linreg_placement": (r"equal=(-?[\d.]+)", r"vs_best=(-?[\d.]+)%",
                                 r"mixed_gain=(-?[\d.]+)%"),
+    "sched_overhead_per_task": (r"pop_margin5=(-?[\d.]+)%",
+                                r"steal_margin5=(-?[\d.]+)%",
+                                ("max_us", r"pop_slot=(-?[\d.]+)us", 15.0),
+                                ("max_us", r"steal_slot=(-?[\d.]+)us", 25.0)),
+    "device_dag_relower_cache": (r"hit_margin=(-?[\d.]+)%",
+                                 r"equal=(-?[\d.]+)"),
 }
 TOLERANCE = -1e-6  # simulator determinism should make these exact
 
@@ -149,16 +172,32 @@ def check_invariants(rows: dict[str, tuple[float, str]], path: str) -> int:
             failures += 1
             continue
         _, derived = got
-        for pattern in patterns:
+        for gate in patterns:
+            kind, ceiling = "gain", None
+            pattern = gate
+            if isinstance(gate, tuple):
+                kind, pattern, ceiling = gate
+                if kind != "max_us":
+                    print(f"GATE MALFORMED: `{name}` unknown gate kind "
+                          f"{kind!r}")
+                    failures += 1
+                    continue
             m = re.search(pattern, derived)
             if m is None:
                 print(f"GATE MALFORMED: `{name}` lacks {pattern!r}: {derived}")
                 failures += 1
                 continue
-            gain = float(m.group(1))
-            verdict = "OK" if gain >= TOLERANCE else "FAIL"
-            print(f"{verdict}: {name} {pattern.split('=')[0]}={gain:.3f}")
-            failures += verdict == "FAIL"
+            val = float(m.group(1))
+            if kind == "max_us":
+                ok = val <= ceiling
+                verdict = "OK" if ok else "FAIL"
+                print(f"{verdict}: {name} {pattern.split('=')[0]}={val:.3f}us "
+                      f"(ceiling {ceiling:g}us)")
+            else:
+                ok = val >= TOLERANCE
+                verdict = "OK" if ok else "FAIL"
+                print(f"{verdict}: {name} {pattern.split('=')[0]}={val:.3f}")
+            failures += not ok
     return failures
 
 

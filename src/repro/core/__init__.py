@@ -66,6 +66,8 @@ from .dag import (
     DEP_ELEMENTWISE,
     DEP_FULL,
     DagResult,
+    EventLog,
+    NullEventLog,
     PipelineDAG,
     PipelineExecutor,
     Stage,
@@ -77,8 +79,12 @@ from .device_schedule import (
     DeviceDagTables,
     assign_chunks,
     build_dag_tables,
+    build_dag_tables_cached,
     build_task_table,
+    clear_dag_table_cache,
     cost_balanced_assignment,
+    dag_signature,
+    dag_table_cache_stats,
     per_shard_tables,
     rebalance,
     rebalance_dag,
@@ -118,6 +124,8 @@ from .partitioners import (
     Partitioner,
     chunk_schedule,
     chunk_sizes,
+    first_chunk,
+    first_chunk_fn,
     make_partitioner,
 )
 from .preempt import (
@@ -131,7 +139,14 @@ from .preempt import (
     resume_on_host,
     run_device_prefix,
 )
-from .queues import QUEUE_LAYOUTS, CentralizedQueue, DistributedQueues
+from .queues import (
+    QUEUE_IMPLS,
+    QUEUE_LAYOUTS,
+    CentralizedQueue,
+    DistributedQueues,
+    SlotCentralizedQueue,
+    SlotDistributedQueues,
+)
 from .simulator import (
     DagSimResult,
     DagStats,
@@ -150,8 +165,10 @@ from .task import RangeTask, tasks_from_schedule
 from .victim import VICTIM_STRATEGIES, VictimSelector, make_victim_selector
 
 __all__ = [
-    "PARTITIONERS", "Partitioner", "chunk_schedule", "chunk_sizes", "make_partitioner",
-    "QUEUE_LAYOUTS", "CentralizedQueue", "DistributedQueues",
+    "PARTITIONERS", "Partitioner", "chunk_schedule", "chunk_sizes",
+    "first_chunk", "first_chunk_fn", "make_partitioner",
+    "QUEUE_LAYOUTS", "QUEUE_IMPLS", "CentralizedQueue", "DistributedQueues",
+    "SlotCentralizedQueue", "SlotDistributedQueues",
     "VICTIM_STRATEGIES", "VictimSelector", "make_victim_selector",
     "RangeTask", "tasks_from_schedule",
     "SchedulerConfig", "ScheduledExecutor", "ExecutionStats",
@@ -159,6 +176,7 @@ __all__ = [
     "frozen_dag_makespans", "ServerSimResult", "simulate_server",
     "DEP_FULL", "DEP_ELEMENTWISE", "Stage", "StageDep", "PipelineDAG",
     "PipelineExecutor", "StageResult", "DagResult", "TaskEvent",
+    "EventLog", "NullEventLog",
     "Job", "JobState", "JobResult", "ServerResult", "ServerTaskEvent",
     "Arbiter", "FifoArbiter", "PriorityArbiter", "FairShareArbiter",
     "ARBITERS", "make_arbiter", "PipelineServer", "job_stage_costs",
@@ -166,6 +184,8 @@ __all__ = [
     "build_task_table", "assign_chunks", "per_shard_tables", "rebalance",
     "cost_balanced_assignment",
     "DeviceDagTables", "build_dag_tables", "rebalance_dag",
+    "dag_signature", "build_dag_tables_cached", "dag_table_cache_stats",
+    "clear_dag_table_cache",
     "select_offline", "OnlineTuner", "default_search_space",
     "select_offline_dag", "DagTuner", "select_offline_server",
     "select_offline_device_dag",

@@ -49,13 +49,14 @@ from typing import Any, Callable
 import numpy as np
 
 from .executor import SchedulerConfig
-from .online import ChunkObservation, OnlineChoice
+from .online import OnlineChoice
 from .partitioners import chunk_schedule
 from .victim import make_victim_selector
 
 __all__ = [
     "DEP_FULL", "DEP_ELEMENTWISE", "Stage", "StageDep", "PipelineDAG",
     "PipelineExecutor", "StageResult", "DagResult", "TaskEvent",
+    "EventLog", "NullEventLog",
 ]
 
 DEP_FULL = "full"
@@ -171,6 +172,83 @@ class TaskEvent:
     wait_s: float = 0.0
 
 
+class EventLog:
+    """Amortized event timeline: tuples on the hot path, events on read.
+
+    The executors' record paths run under the pool lock, where a frozen
+    dataclass construction (~1 us) per chunk is pure scheduler overhead;
+    appending the field tuple costs ~0.1 us. The log stores those raw
+    tuples and materializes ``cls`` instances lazily — the first len()/
+    index/iteration after an append builds the event list once and caches
+    it, so analysis code (tests, DagResult.stats) sees a normal sequence
+    of TaskEvent/ServerTaskEvent objects while the worker loop never pays
+    for them. ``iter_stat_tuples`` feeds ``stats_from_events`` without
+    materializing anything.
+    """
+
+    __slots__ = ("_raw", "_mat", "cls", "_si", "_t0i", "_t1i", "_wi")
+
+    def __init__(self, cls=None):
+        cls = cls if cls is not None else TaskEvent
+        self.cls = cls
+        self._raw: list[tuple] = []
+        self._mat: list | None = None
+        names = [f.name for f in dataclasses.fields(cls)]
+        self._si = names.index("stage")
+        self._t0i = names.index("t_start")
+        self._t1i = names.index("t_end")
+        self._wi = names.index("wait_s") if "wait_s" in names else -1
+
+    def append_raw(self, *fields) -> None:
+        """Record one event as its positional field tuple (hot path)."""
+        self._raw.append(fields)
+        self._mat = None
+
+    def append(self, ev) -> None:
+        """Record an already-built event (slow path, checkpoint/restore)."""
+        self._raw.append(dataclasses.astuple(ev))
+        self._mat = None
+
+    def _events(self) -> list:
+        if self._mat is None:
+            cls = self.cls
+            self._mat = [cls(*t) for t in self._raw]
+        return self._mat
+
+    def __len__(self) -> int:
+        return len(self._raw)
+
+    def __bool__(self) -> bool:
+        return bool(self._raw)
+
+    def __iter__(self):
+        return iter(self._events())
+
+    def __getitem__(self, i):
+        return self._events()[i]
+
+    def iter_stat_tuples(self):
+        """Yield (stage, exec_s, wait_s) per event straight off the raw
+        tuples — the DagStats aggregation path (no materialization)."""
+        si, t0i, t1i, wi = self._si, self._t0i, self._t1i, self._wi
+        for t in self._raw:
+            yield t[si], t[t1i] - t[t0i], (t[wi] if wi >= 0 else 0.0)
+
+
+class NullEventLog(EventLog):
+    """The opt-out: ``record_events=False`` hot paths append into this.
+
+    Every append is a no-op, so runs that never read their timeline
+    (throughput benchmarks, long-lived servers) pay nothing per chunk.
+    """
+
+    def append_raw(self, *fields) -> None:
+        pass
+
+    def append(self, ev) -> None:
+        pass
+
+
 @dataclass
 class StageResult:
     """Per-stage outcome: combined value, realized schedule, measured costs."""
@@ -189,7 +267,7 @@ class DagResult:
 
     values: dict[str, Any]
     stages: dict[str, StageResult]
-    events: list[TaskEvent]
+    events: Any  # EventLog (lazy sequence of TaskEvent) or a plain list
     wall_time_s: float
     steals: int
     per_worker_busy_s: list[float]
@@ -228,7 +306,8 @@ class _StageRun:
 
     __slots__ = ("stage", "cfg", "schedule", "tasks", "queues", "home",
                  "selector", "row_done", "remaining", "out", "acc", "value",
-                 "done", "costs", "executed", "resizes", "t_first", "t_last")
+                 "done", "costs", "executed", "resizes", "t_first", "t_last",
+                 "has_deps")
 
     def __init__(self, stage: Stage, cfg: SchedulerConfig, domains: list[int]):
         self.stage = stage
@@ -268,6 +347,7 @@ class _StageRun:
         self.resizes = 0    # moldable interventions on THIS run (budget key)
         self.t_first: float | None = None
         self.t_last: float | None = None
+        self.has_deps = bool(stage.deps)  # dep-less stages skip readiness checks
 
     def pending_chunks(self) -> list[tuple[int, int]]:
         """(start, size) of chunks dealt to queues but not yet popped."""
@@ -380,12 +460,23 @@ def _try_pop(sr: _StageRun, runs: dict[str, _StageRun], wid: int):
     """
     home = sr.home[wid] if len(sr.home) > wid else 0
     q = sr.queues[home]
-    if q and _task_ready(sr, runs, q[0]):
+    if sr.has_deps:
+        if q and _task_ready(sr, runs, q[0]):
+            return q.popleft(), False
+        if sr.selector is not None:
+            for v in sr.selector.candidates(home):
+                vq = sr.queues[v]
+                if vq and _task_ready(sr, runs, vq[-1]):
+                    return vq.pop(), True
+        return None, False
+    # dep-less stage: every queued chunk is runnable — skip the per-pop
+    # readiness walk entirely (the off-critical-path fast path, §16)
+    if q:
         return q.popleft(), False
     if sr.selector is not None:
         for v in sr.selector.candidates(home):
             vq = sr.queues[v]
-            if vq and _task_ready(sr, runs, vq[-1]):
+            if vq:
                 return vq.pop(), True
     return None, False
 
@@ -431,9 +522,11 @@ class PipelineExecutor:
     converge onto the best observed configuration.
     """
 
-    def __init__(self, dag: PipelineDAG, config: SchedulerConfig):
+    def __init__(self, dag: PipelineDAG, config: SchedulerConfig,
+                 record_events: bool = True):
         self.dag = dag
         self.config = config
+        self.record_events = record_events
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
 
@@ -477,7 +570,7 @@ class PipelineExecutor:
         n_workers = self.config.n_workers
         cond = threading.Condition()
         remaining_total = sum(sr.remaining for sr in order)
-        events: list[TaskEvent] = []
+        events = EventLog() if self.record_events else NullEventLog()
         errors: list[BaseException] = []
         busy = [0.0] * n_workers
         ntasks = [0] * n_workers
@@ -491,14 +584,13 @@ class PipelineExecutor:
             i, s, z = task
             sr.record(task, value, dt, rel0, rel1)
             remaining_total -= 1
-            events.append(TaskEvent(sr.stage.name, i, s, z, wid, rel0, rel1,
-                                    stolen, wait_s))
+            events.append_raw(sr.stage.name, i, s, z, wid, rel0, rel1,
+                              stolen, wait_s)
             busy[wid] += dt
             ntasks[wid] += 1
             steals[0] += int(stolen)
             if online is not None:
-                online.record(ChunkObservation(
-                    sr.stage.name, i, s, z, dt, wid, rel1))
+                online.record_raw(sr.stage.name, z, dt)
                 if not sr.done and online.may_resize(sr.stage.name, sr.resizes):
                     plan = online.plan_resize(
                         sr.stage.name, sr.pending_chunks(), n_workers,

@@ -18,7 +18,8 @@ from dataclasses import dataclass, field
 
 from .online import ChunkObservation
 from .partitioners import make_partitioner
-from .queues import CentralizedQueue, DistributedQueues
+from .queues import (CentralizedQueue, DistributedQueues, QUEUE_IMPLS,
+                     SlotCentralizedQueue, SlotDistributedQueues)
 from .task import RangeTask
 from .victim import make_victim_selector
 
@@ -27,7 +28,15 @@ __all__ = ["SchedulerConfig", "ExecutionStats", "ScheduledExecutor"]
 
 @dataclass(frozen=True)
 class SchedulerConfig:
-    """User-facing scheduling knobs (the paper's two independent axes)."""
+    """User-facing scheduling knobs (the paper's two independent axes).
+
+    ``queue_impl`` selects the queue machinery behind the layout: "slot"
+    (preallocated slot-array queues on numpy index buffers, DESIGN.md §16)
+    or "deque" (the original lock-guarded deques, kept as the differential
+    reference). Both produce identical pop/steal sequences; this is a
+    pool/runtime property, so executors take it from the pool config even
+    for stages that override everything else.
+    """
 
     technique: str = "STATIC"         # work partitioning (11 options)
     queue_layout: str = "CENTRALIZED"  # CENTRALIZED | PERCORE | PERGROUP
@@ -35,6 +44,12 @@ class SchedulerConfig:
     n_workers: int = 4
     numa_domains: tuple[int, ...] | None = None  # one domain id per worker
     seed: int = 0
+    queue_impl: str = "slot"           # slot | deque (DESIGN.md §16)
+
+    def __post_init__(self):
+        if self.queue_impl not in QUEUE_IMPLS:
+            raise ValueError(
+                f"unknown queue_impl {self.queue_impl!r}; options: {QUEUE_IMPLS}")
 
 
 @dataclass
@@ -108,24 +123,40 @@ class ScheduledExecutor:
                         task.size, dt, worker_id, t1 - t_start))
 
         t_start = time.perf_counter()
+        slot = cfg.queue_impl == "slot"
         if cfg.queue_layout.upper() == "CENTRALIZED":
-            part = make_partitioner(cfg.technique, len(tasks), cfg.n_workers, seed=cfg.seed)
-            queue = CentralizedQueue(tasks, part)
+            if slot:
+                queue = SlotCentralizedQueue(tasks, cfg.technique,
+                                             cfg.n_workers, seed=cfg.seed)
 
-            def worker(worker_id: int) -> None:
-                """Drain technique-sized chunks off the shared queue."""
-                while True:
-                    chunk = queue.pop(worker_id)
-                    if not chunk:
-                        return
-                    for t in chunk:
-                        record(worker_id, t)
+                def worker(worker_id: int) -> None:
+                    """Drain chunk ranges off the slot-array queue."""
+                    while True:
+                        h, e = queue.pop_range(worker_id)
+                        if h == e:
+                            return
+                        for t in tasks[h:e]:
+                            record(worker_id, t)
+            else:
+                part = make_partitioner(cfg.technique, len(tasks),
+                                        cfg.n_workers, seed=cfg.seed)
+                queue = CentralizedQueue(tasks, part)
+
+                def worker(worker_id: int) -> None:
+                    """Drain technique-sized chunks off the shared queue."""
+                    while True:
+                        chunk = queue.pop(worker_id)
+                        if not chunk:
+                            return
+                        for t in chunk:
+                            record(worker_id, t)
 
             self._run_threads(worker, cfg.n_workers)
             stats.contended_pops = queue.contended_pops
             stats.queue_pops = queue.pops
         else:
-            queues = DistributedQueues(
+            cls = SlotDistributedQueues if slot else DistributedQueues
+            queues = cls(
                 tasks, cfg.technique, cfg.n_workers,
                 layout=cfg.queue_layout, groups=self._domains, seed=cfg.seed,
             )
@@ -135,25 +166,46 @@ class ScheduledExecutor:
                               else list(range(queues.n_queues))),
                 seed=cfg.seed,
             )
+            if slot:
+                table = queues.task_table()
 
-            def worker(worker_id: int) -> None:
-                """Drain the home queue chunk-wise, then steal in victim order."""
-                home = queues.owner_of(worker_id)
-                while True:
-                    chunk = queues.pop_local(worker_id)
-                    if chunk:
-                        for t in chunk:
-                            record(worker_id, t)
-                        continue
-                    # out of local work: steal (victim order per strategy)
-                    stolen: list[RangeTask] = []
-                    for victim in selector.candidates(home):
-                        stolen = queues.steal(worker_id, victim)
-                        if stolen:
-                            break
-                    if not stolen:
-                        return  # global exhaustion
-                    queues.push_local(worker_id, stolen)
+                def worker(worker_id: int) -> None:
+                    """Drain the home queue in index space; steal by moving
+                    the victim's tail run into the home buffer (one int32
+                    copy, no task materialization on the queue op)."""
+                    home = queues.owner_of(worker_id)
+                    while True:
+                        got = queues.pop_local_idx(worker_id)
+                        if len(got):
+                            for i in got:
+                                record(worker_id, table[i])
+                            continue
+                        moved = 0
+                        for victim in selector.candidates(home):
+                            moved = queues.steal_to_home(worker_id, victim)
+                            if moved:
+                                break
+                        if not moved:
+                            return  # global exhaustion
+            else:
+                def worker(worker_id: int) -> None:
+                    """Drain the home queue chunk-wise, then steal in victim order."""
+                    home = queues.owner_of(worker_id)
+                    while True:
+                        chunk = queues.pop_local(worker_id)
+                        if chunk:
+                            for t in chunk:
+                                record(worker_id, t)
+                            continue
+                        # out of local work: steal (victim order per strategy)
+                        stolen: list[RangeTask] = []
+                        for victim in selector.candidates(home):
+                            stolen = queues.steal(worker_id, victim)
+                            if stolen:
+                                break
+                        if not stolen:
+                            return  # global exhaustion
+                        queues.push_local(worker_id, stolen)
 
             self._run_threads(worker, cfg.n_workers)
             stats.steals = queues.steals

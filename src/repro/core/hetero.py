@@ -48,6 +48,7 @@ import numpy as np
 
 from .dag import (
     DagResult,
+    EventLog,
     PipelineDAG,
     StageResult,
     TaskEvent,
@@ -306,7 +307,7 @@ class HeteroExecutor:
         full_cross: dict[tuple[str, int], bool] = {}
 
         cond = threading.Condition()
-        events: list[TaskEvent] = []
+        events = EventLog(TaskEvent)
         errors: list[BaseException] = []
         busy = [0.0] * n_lanes
         ntasks = [0] * n_lanes
@@ -358,8 +359,7 @@ class HeteroExecutor:
                 if sr.done:
                     sr.acc = sr.value = acc
             remaining_total -= 1
-            events.append(TaskEvent(name, i, s, z, lane, rel0, rel1,
-                                    stolen, wait_s))
+            events.append_raw(name, i, s, z, lane, rel0, rel1, stolen, wait_s)
             busy[lane] += dt
             ntasks[lane] += 1
             steals[0] += int(stolen)

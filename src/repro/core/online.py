@@ -127,10 +127,16 @@ class StageFeedback:
 
     def add(self, obs: ChunkObservation) -> None:
         """Fold one chunk observation in."""
-        rate = obs.cost_s / max(1, obs.size)
+        self.add_raw(obs.size, obs.cost_s)
+
+    def add_raw(self, size: int, cost_s: float) -> None:
+        """Fold one chunk in from its raw (size, cost) — the statistics
+        only ever read those two fields, so hot paths can skip building
+        a ChunkObservation per chunk (DESIGN.md §16)."""
+        rate = cost_s / max(1, size)
         self.n += 1
-        self.rows += obs.size
-        self.total_s += obs.cost_s
+        self.rows += size
+        self.total_s += cost_s
         a = max(self.decay, 1.0 / self.n)  # exact stats until the window fills
         d = rate - self._mean
         self._mean += a * d
@@ -161,11 +167,16 @@ class FeedbackLog:
 
     def record(self, obs: ChunkObservation) -> None:
         """Fold one observation into its stage's statistics."""
+        self.record_raw(obs.stage, obs.size, obs.cost_s)
+
+    def record_raw(self, stage: str, size: int, cost_s: float) -> None:
+        """Allocation-free record: fold raw (size, cost) into ``stage``'s
+        statistics without a ChunkObservation object on the hot path."""
         with self._lock:
-            fb = self.stages.get(obs.stage)
+            fb = self.stages.get(stage)
             if fb is None:
-                fb = self.stages[obs.stage] = StageFeedback()
-            fb.add(obs)
+                fb = self.stages[stage] = StageFeedback()
+            fb.add_raw(size, cost_s)
 
     def stage(self, name: str) -> StageFeedback | None:
         """The statistics collected for ``name`` so far (None if nothing)."""
@@ -411,7 +422,11 @@ class OnlineScheduler:
     # -- feedback + moldable resizing --------------------------------------
     def record(self, obs: ChunkObservation) -> None:
         """Stream one completed chunk into the feedback statistics."""
-        self.feedback.record(obs)
+        self.feedback.record_raw(obs.stage, obs.size, obs.cost_s)
+
+    def record_raw(self, stage: str, size: int, cost_s: float) -> None:
+        """Allocation-free variant of ``record`` for executor hot paths."""
+        self.feedback.record_raw(stage, size, cost_s)
 
     def may_resize(self, stage: str, resizes_done: int = 0) -> bool:
         """Cheap pre-check: could ``plan_resize`` possibly act for ``stage``?

@@ -499,12 +499,12 @@ def migrate_to_device(ck: JobCheckpoint, lowering, interpret: bool = True):
     from jax.experimental import pallas as pl
 
     from ..kernels.dag_walk import WalkOperand, dag_walk
-    from .device_schedule import build_dag_tables
+    from .device_schedule import build_dag_tables_cached
 
     dag = lowering.dag
     tile = lowering.tile
     ck.validate(dag)
-    ddt = build_dag_tables(dag, 1, "SS", n_shards=1)
+    ddt = build_dag_tables_cached(dag, 1, "SS", n_shards=1)
     table = ddt.tables[0]
     names = list(ddt.stage_names)
     by_name = {s.name: s for s in lowering.stages}
@@ -648,11 +648,11 @@ def run_device_prefix(lowering, n_slots: int, interpret: bool = True):
     row-space walker output of the prefix.
     """
     from ..kernels.dag_walk import dag_walk
-    from .device_schedule import build_dag_tables
+    from .device_schedule import build_dag_tables_cached
 
     dag = lowering.dag
     tile = lowering.tile
-    ddt = build_dag_tables(dag, 1, "SS", n_shards=1)
+    ddt = build_dag_tables_cached(dag, 1, "SS", n_shards=1)
     live = ddt.tables[0][ddt.tables[0][:, 2] > 0]
     names = list(ddt.stage_names)
     by_name = {s.name: s for s in lowering.stages}

@@ -46,6 +46,8 @@ import numpy as np
 
 from .dag import (
     DEP_FULL,
+    EventLog,
+    NullEventLog,
     PipelineDAG,
     _resolve_stage_config,
     _stage_inputs,
@@ -54,7 +56,6 @@ from .dag import (
 )
 from .executor import SchedulerConfig
 from .hetero import pop_device_task, split_device_tasks, steal_device_tail
-from .online import ChunkObservation
 
 __all__ = [
     "Job", "JobState", "JobResult", "ServerResult", "ServerTaskEvent",
@@ -353,7 +354,8 @@ class PipelineServer:
                  arbiter: str | Arbiter = "fair",
                  arbiter_kwargs: dict | None = None,
                  online=None,
-                 n_device: int = 1):
+                 n_device: int = 1,
+                 record_events: bool = True):
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
@@ -361,6 +363,7 @@ class PipelineServer:
         self._arbiter_kwargs = dict(arbiter_kwargs or {})
         self._online = online
         self._n_device = max(1, n_device)
+        self.record_events = record_events
         self._queued: list = []
 
     def submit(self, sub) -> None:
@@ -417,7 +420,8 @@ class PipelineServer:
         cond = threading.Condition()
         total_left = [0]    # outstanding tasks in BUILT stage runs
         unbuilt = [0]       # stage runs not built yet (lazy/online mode)
-        events: list[ServerTaskEvent] = []
+        events = (EventLog(ServerTaskEvent) if self.record_events
+                  else NullEventLog(ServerTaskEvent))
         errors: list[BaseException] = []
         busy = [0.0] * n_lanes
         ntasks = [0] * n_lanes
@@ -620,9 +624,7 @@ class PipelineServer:
                         job_left[js.job.name] -= 1
                         total_left[0] -= 1
                         if online is not None:
-                            online.record(ChunkObservation(
-                                sr.stage.name, task[0], task[1], task[2],
-                                t1 - t0, wid, t1 - t0_run))
+                            online.record_raw(sr.stage.name, task[2], t1 - t0)
                             if not sr.done and online.may_resize(
                                     sr.stage.name, sr.resizes):
                                 plan = online.plan_resize(
@@ -683,9 +685,8 @@ class PipelineServer:
         dt = rel1 - rel0
         sr.record(task, value, dt, rel0, rel1)
         arbiter.charge(js, dt, rel1)
-        events.append(ServerTaskEvent(
-            js.job.name, js.job.tenant, sr.stage.name, i, s, z, wid,
-            rel0, rel1, stolen, boosted))
+        events.append_raw(js.job.name, js.job.tenant, sr.stage.name, i, s, z,
+                          wid, rel0, rel1, stolen, boosted)
         busy[wid] += dt
         ntasks[wid] += 1
         job_tasks[js.job.name] += 1

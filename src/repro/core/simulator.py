@@ -27,14 +27,13 @@ from __future__ import annotations
 
 import heapq
 import math
-from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from .device_schedule import DeviceDagTables, build_dag_tables
+from .device_schedule import DeviceDagTables, build_dag_tables_cached
 from .online import ChunkObservation
-from .partitioners import chunk_schedule, make_partitioner
+from .partitioners import chunk_schedule, first_chunk_fn, make_partitioner
 from .victim import make_victim_selector
 
 __all__ = ["SimOverheads", "SimResult", "simulate", "DagSimResult",
@@ -102,6 +101,13 @@ def stats_from_events(events) -> DagStats:
     cross-substrate consumption counts in afterwards).
     """
     stats = DagStats()
+    raw = getattr(events, "iter_stat_tuples", None)
+    if raw is not None:
+        # EventLog fast path: aggregate off the raw tuples without
+        # materializing per-event dataclasses (DESIGN.md §16)
+        for stage, exec_s, wait_s in raw():
+            stats.add_chunk(stage, exec_s, wait_s)
+        return stats
     for ev in events:
         stats.add_chunk(ev.stage, ev.t_end - ev.t_start,
                         getattr(ev, "wait_s", 0.0))
@@ -139,13 +145,50 @@ class SimResult:
 
 
 class _SimQueue:
-    """A lock-protected queue in virtual time."""
+    """A lock-protected queue in virtual time, on a slot-array buffer.
 
-    __slots__ = ("items", "busy_until")
+    Task indices live in a preallocated int32 buffer with head/tail
+    cursors (the §16 layout): ``pop_head(c)`` / ``pop_tail(c)`` are O(1)
+    cursor bumps returning ascending index slices — ``pop_tail`` IS the
+    steal primitive (a tail slice is already in original ascending order,
+    no per-item pop+reverse). Virtual-time results are bit-identical to
+    the old deque implementation (same indices, same order).
+    """
 
-    def __init__(self):
-        self.items: deque[int] = deque()  # task indices
+    __slots__ = ("idx", "head", "tail", "busy_until")
+
+    def __init__(self, n: int = 0):
+        self.idx = np.empty(n, dtype=np.int32)
+        self.head = 0
+        self.tail = 0
         self.busy_until = 0.0
+
+    def fill(self, lo: int, hi: int) -> None:
+        """Append the contiguous index run [lo, hi) at the tail."""
+        c = hi - lo
+        if c <= 0:
+            return
+        if self.tail + c > len(self.idx):
+            grown = np.empty(max(16, 2 * (self.tail + c)), dtype=np.int32)
+            grown[:self.tail] = self.idx[:self.tail]
+            self.idx = grown
+        self.idx[self.tail:self.tail + c] = np.arange(lo, hi, dtype=np.int32)
+        self.tail += c
+
+    def __len__(self) -> int:
+        return self.tail - self.head
+
+    def pop_head(self, c: int) -> np.ndarray:
+        """Take ``c`` indices off the head (a worker's local FIFO pop)."""
+        h = self.head
+        self.head = h + c
+        return self.idx[h:h + c]
+
+    def pop_tail(self, c: int) -> np.ndarray:
+        """Cut ``c`` indices off the tail — the steal run, ascending."""
+        s = self.tail - c
+        self.tail = s
+        return self.idx[s:s + c]
 
     def access(self, t: float, hold: float) -> float:
         """Serialize an access starting at time t; return completion time."""
@@ -231,8 +274,7 @@ def simulate(
         # within each block: granularity shrinks by 1/#groups (paper Fig 8b).
         block = -(-n // n_queues)
         for qi in range(n_queues):
-            lo, hi = qi * block, min(n, (qi + 1) * block)
-            queues[qi].items.extend(range(lo, hi))
+            queues[qi].fill(qi * block, min(n, (qi + 1) * block))
     else:
         # global chunk sequence dealt round-robin (no pre-partitioning)
         part = make_partitioner(technique, n, n_workers, seed=seed)
@@ -241,7 +283,7 @@ def simulate(
             c = part.next_chunk()
             if c == 0:
                 break
-            queues[qi % n_queues].items.extend(range(i, min(n, i + c)))
+            queues[qi % n_queues].fill(i, min(n, i + c))
             i += c
             qi += 1
 
@@ -249,9 +291,13 @@ def simulate(
     # per-queue pop partitioners: popping from one's own queue also follows
     # the technique (self-scheduling within the queue)
     pop_parts = [
-        make_partitioner(technique, max(1, len(q.items)), n_workers, seed=seed + 17 * qi)
+        make_partitioner(technique, max(1, len(q)), n_workers, seed=seed + 17 * qi)
         for qi, q in enumerate(queues)
     ]
+    # steal amounts are a fresh partitioner's first chunk against the
+    # victim's remaining count — a pure function of (technique, r, P,
+    # seed), evaluated closed-form (bit-equal, see partitioners.first_chunk)
+    steal_chunk = first_chunk_fn(technique, n_workers, seed=seed)
 
     heap = [(0.0, w) for w in range(n_workers)]
     heapq.heapify(heap)
@@ -261,11 +307,11 @@ def simulate(
         t, w = heapq.heappop(heap)
         hq = home[w]
         q = queues[hq]
-        got: list[int] = []
-        if q.items:
+        got = None
+        if len(q):
             t = q.access(t, ov.h_local if layout == "PERCORE" else ov.h_access)
-            c = max(1, min(len(q.items), pop_parts[hq].next_chunk(w)))
-            got = [q.items.popleft() for _ in range(c)]
+            c = max(1, min(len(q), pop_parts[hq].next_chunk(w)))
+            got = q.pop_head(c)
         else:
             # steal: probe victims in strategy order; amount follows technique
             thief_dom = domains[w] if layout == "PERCORE" else home[w]
@@ -274,16 +320,14 @@ def simulate(
                 mult = 1.0 if vdom == thief_dom else ov.numa_mult
                 t += ov.h_probe * mult
                 vq = queues[victim]
-                if vq.items:
+                r = len(vq)
+                if r:
                     t = vq.access(t, ov.h_access * mult)
-                    r = len(vq.items)
-                    sp = make_partitioner(technique, r, n_workers, seed=seed)
-                    c = max(1, min(r, sp.next_chunk(w)))
-                    got = [vq.items.pop() for _ in range(c)]
-                    got.reverse()  # tail run in original (ascending) order
+                    c = max(1, min(r, steal_chunk(r)))
+                    got = vq.pop_tail(c)  # tail run, already ascending
                     steals += 1
                     break
-        if not got:
+        if got is None:
             finish[w] = max(finish[w], t)
             done_workers += 1
             continue
@@ -528,8 +572,8 @@ def simulate_dag(
             for n in names:
                 cfg = per_stage.get(n, "STATIC")
                 techniques[n] = cfg if isinstance(cfg, str) else _combo_of(cfg)[0]
-            ddt = build_dag_tables(dag, tile, techniques,
-                                   n_shards=n_shards or 1, seed=seed)
+            ddt = build_dag_tables_cached(dag, tile, techniques,
+                                          n_shards=n_shards or 1, seed=seed)
         return _simulate_frozen(ddt, row_costs, overheads)
 
     row_costs = _resolve_row_costs(dag, stage_costs)

@@ -28,6 +28,18 @@ GOOD_ROWS = {
     "pipeline_server_preemptive": (89966.8,
                                    "hit=0.930 hit_fair=0.435 preemptions=638 "
                                    "jobs=800 hit_gain=49.51% equal=1"),
+    "sched_overhead_per_task": (1.8,
+                                "pop_slot=1.757us pop_deque=20.957us "
+                                "steal_slot=3.669us steal_deque=25.757us "
+                                "pop_gain=11.93x steal_gain=7.02x "
+                                "pop_margin5=58.08% steal_margin5=28.78% "
+                                "tasks=20000 reps=4 technique=GSS "
+                                "layout=PERCORE"),
+    "device_dag_relower_cache": (281313.4,
+                                 "cold=327207.1us warm=281313.4us "
+                                 "lower_hits=5 lower_misses=1 table_hits=5 "
+                                 "table_misses=1 jobs=6 hit_margin=33.33% "
+                                 "equal=1"),
 }
 
 
@@ -180,6 +192,47 @@ def test_baseline_mode_mismatch_fails(tmp_path, capsys):
         "online_linreg_adaptive": {"us_per_call": 92.2, "tolerance": 0.5}}}))
     assert cg.main([csv, "--against-baseline", str(base)]) == 1
     assert "BASELINE MODE MISMATCH" in capsys.readouterr().out
+
+
+def test_max_us_gate_enforces_absolute_ceiling(tmp_path):
+    """The max_us gate kind fails when the captured value exceeds the
+    ceiling, even if every relative margin still passes."""
+    rows = dict(GOOD_ROWS)
+    rows["sched_overhead_per_task"] = (
+        16.0, "pop_slot=16.000us pop_deque=160.0us steal_slot=3.0us "
+              "steal_deque=30.0us pop_margin5=50.00% steal_margin5=50.00%")
+    assert cg.main([write_csv(tmp_path, rows)]) == 1
+
+
+def test_max_us_gate_passes_at_ceiling(tmp_path):
+    """A value exactly at the ceiling passes (<=, not <)."""
+    rows = dict(GOOD_ROWS)
+    rows["sched_overhead_per_task"] = (
+        15.0, "pop_slot=15.000us pop_deque=160.0us steal_slot=25.000us "
+              "steal_deque=260.0us pop_margin5=53.12% steal_margin5=51.92%")
+    assert cg.main([write_csv(tmp_path, rows)]) == 0
+
+
+def test_sched_overhead_gate_requires_margins(tmp_path):
+    """pop_margin5 / steal_margin5 must both be present and non-negative,
+    and the absolute max_us patterns must be present."""
+    for derived in ("pop_slot=1.8us pop_deque=20us steal_slot=3.7us "
+                    "steal_deque=26us pop_margin5=-0.10% steal_margin5=28.78%",
+                    "pop_slot=1.8us pop_deque=20us steal_slot=3.7us "
+                    "steal_deque=26us pop_margin5=58.08% steal_margin5=-0.10%",
+                    "pop_margin5=58.08% steal_margin5=28.78%"):
+        rows = dict(GOOD_ROWS)
+        rows["sched_overhead_per_task"] = (1.8, derived)
+        assert cg.main([write_csv(tmp_path, rows)]) == 1, derived
+
+
+def test_relower_cache_gate_requires_hits_and_equality(tmp_path):
+    for derived in ("hit_margin=-0.10% equal=1",
+                    "hit_margin=33.33% equal=-1",
+                    "hit_margin=33.33%"):
+        rows = dict(GOOD_ROWS)
+        rows["device_dag_relower_cache"] = (100.0, derived)
+        assert cg.main([write_csv(tmp_path, rows)]) == 1, derived
 
 
 def test_hetero_gate_requires_all_three_patterns(tmp_path):

@@ -1,0 +1,57 @@
+"""cProfile the CI-gated serving benchmark and dump the hot functions.
+
+Runs ``benchmarks/run.py:bench_pipeline_server`` (the function emitting
+the ``pipeline_server_mixed_load`` row) under cProfile and writes the
+top-N entries by cumulative time to
+``artifacts/profile_pipeline_server_mixed_load.txt``. CI's bench-quick
+job uploads that file as a non-blocking artifact so hot-path
+regressions (§16) are diagnosable from the run page without a rerun.
+
+Usage: PYTHONPATH=src python tools/profile_bench.py [--top 25] [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import cProfile
+import io
+import pstats
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT / "benchmarks"))
+
+OUT = ROOT / "artifacts" / "profile_pipeline_server_mixed_load.txt"
+
+
+def main() -> None:
+    """Profile bench_pipeline_server and write the top-N stats table."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--top", type=int, default=25,
+                    help="number of rows in the stats table (default 25)")
+    ap.add_argument("--full", action="store_true",
+                    help="profile the full-size bench instead of --quick")
+    args = ap.parse_args()
+
+    import run as bench  # benchmarks/run.py
+
+    prof = cProfile.Profile()
+    prof.enable()
+    bench.bench_pipeline_server(quick=not args.full)
+    prof.disable()
+
+    buf = io.StringIO()
+    stats = pstats.Stats(prof, stream=buf)
+    stats.strip_dirs().sort_stats("cumulative").print_stats(args.top)
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(
+        f"cProfile: bench_pipeline_server(quick={not args.full}) — "
+        f"top {args.top} by cumulative time\n\n" + buf.getvalue()
+    )
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()
