@@ -57,6 +57,17 @@ row must never silently pass:
                                 lowering memo and the device-resident
                                 table cache (hit_margin >= 0) and cached
                                 runs stay bit-equal to cold runs (equal=1)
+  moe_dispatch_adaptive         on a Zipf-skewed router, the §12 online
+                                adaptive makespan never exceeds the best
+                                static uniform partition of the MoE
+                                expert fan-out (vs_best_static >= 0) and
+                                the lowered dispatch reproduces the
+                                direct call bit-wise on a real pool
+                                (equal=1)
+  model_zoo_pipeline            the lowered transformer step chain and
+                                the two-model §14 serving pair are both
+                                bit-equal to their direct oracles
+                                (equal=1)
 
 Gate kinds: a plain pattern string asserts its captured value >= 0; a
 ``("max_us", pattern, ceiling)`` entry asserts the captured value <=
@@ -111,6 +122,9 @@ GATES: dict[str, tuple] = {
                                 ("max_us", r"steal_slot=(-?[\d.]+)us", 25.0)),
     "device_dag_relower_cache": (r"hit_margin=(-?[\d.]+)%",
                                  r"equal=(-?[\d.]+)"),
+    "moe_dispatch_adaptive": (r"equal=(-?[\d.]+)",
+                              r"vs_best_static=(-?[\d.]+)%"),
+    "model_zoo_pipeline": (r"equal=(-?[\d.]+)",),
 }
 TOLERANCE = -1e-6  # simulator determinism should make these exact
 
@@ -120,7 +134,7 @@ DETERMINISTIC_PREFIXES = ("pipeline_dag_cc_regression",
                           "pipeline_server_mixed_load",
                           "pipeline_server_openloop",
                           "pipeline_server_preemptive", "online_",
-                          "hetero_")
+                          "hetero_", "moe_dispatch_adaptive")
 
 # provenance keys that must match between the accepted baseline and the
 # current run: numbers from one machine must not gate another one.

@@ -21,6 +21,9 @@ the JSON is uploaded as a CI artifact).
   hetero_*           §13 heterogeneous placement: the transfer-aware solver
                      vs the all-HOST / all-DEVICE baselines, plus real
                      host+device co-execution bit-equality
+  moe_dispatch_* /   §17 model zoo: online adaptivity on the skewed MoE
+  model_zoo_*        expert fan-out; transformer step chain + two-model
+                     serving pair bit-equal to the direct model calls
   cc_vee_*           the paper's CC hot loop on the real VEE
   schedule_quality_* device-side assignment quality (LPT vs round-robin)
   roofline_*         summary of artifacts/roofline.json (dry-run derived)
@@ -654,6 +657,69 @@ def bench_hetero(quick: bool = False) -> None:
         f"vs_best={vs_best:.2f}% mixed_gain={mixed_gain:.2f}%")
 
 
+def bench_model_zoo(quick: bool = False) -> None:
+    """Model-zoo rows (§17): real transformer/MoE step graphs lowered
+    onto the scheduler via ``core.lower`` / ``vee.ml_apps``.
+
+    ``moe_dispatch_adaptive`` is CI-gated twice: on a Zipf-skewed router
+    the §12 online-adaptive makespan must never exceed the best static
+    uniform partition (vs_best_static >= 0 — the expert fan-out's
+    data-dependent chunk costs are exactly what the bandits + moldable
+    resizer exploit), and a real-pool run of the lowered dispatch must be
+    bit-equal to the direct (unscheduled) call (equal = 1).
+    ``model_zoo_pipeline`` is gated on equal only: the streamed
+    transformer step chain AND the two-model §14 serving pair (with §13
+    placements solved on real activation byte sizes) must both reproduce
+    their direct oracles bit-wise; us_per_call tracks the real pipelined
+    step wall time.
+    """
+    from repro.core import select_offline_dag, tune_online_dag
+    from repro.vee.ml_apps import (moe_dispatch_lowering, serving_pair,
+                                   transformer_step_lowering)
+
+    # skewed MoE expert fan-out, deterministic virtual time (§12)
+    n_tok = 384 if quick else 768
+    low = moe_dispatch_lowering(n_tokens=n_tok, skew=1.6, seed=0,
+                                n_experts=32, capacity_factor=6.0)
+    # lowering costs are unit-per-token; scale to ~us so the virtual
+    # makespan reads like the other online_* rows
+    costs = {k: v * 1e-6 for k, v in low.stage_costs.items()}
+    _, _, uniform = select_offline_dag(low.dag, costs, n_workers=4, passes=1)
+    statics = sorted(uniform.values())
+    rounds = 40
+    res = tune_online_dag(low.dag, costs, n_workers=4,
+                          rounds=rounds, seed=0)
+    vs_best_static = (statics[0] - res.makespan) / statics[0] * 100
+    # real-pool bit-equality of the same lowering at real-run scale
+    small = moe_dispatch_lowering(n_tokens=96, skew=1.6, seed=0)
+    equal = np.array_equal(small.run_direct(),
+                           small.run("gss/percore", n_workers=2)[0])
+    row("moe_dispatch_adaptive", res.makespan * 1e6,
+        f"equal={1 if equal else -1} best_static={statics[0] * 1e6:.1f}us "
+        f"median_static={statics[len(statics) // 2] * 1e6:.1f}us "
+        f"rounds={rounds} experts=32 "
+        f"hot_expert_tokens={int(low.meta['expert_tokens'].max())} "
+        f"vs_best_static={vs_best_static:.2f}%")
+
+    # streamed transformer step + the §14 two-model serving pair
+    b, s = (6, 8) if quick else (8, 12)
+    tlow = transformer_step_lowering(batch=b, seq=s, seed=0)
+    tdirect = tlow.run_direct()
+    tlow.run("gss/percore", n_workers=2)  # warm the per-stage jits
+    t0 = time.perf_counter()
+    tsched, _ = tlow.run("gss/percore", n_workers=2)
+    dt = time.perf_counter() - t0
+    t_equal = np.array_equal(tdirect, tsched)
+    presults, _, pplace, plows = serving_pair(batch=4, seq=8, n_workers=2)
+    p_equal = all(np.array_equal(presults[a], pl.run_direct())
+                  for a, pl in zip(("qwen2-0.5b", "granite-8b"), plows))
+    row("model_zoo_pipeline", dt * 1e6,
+        f"equal={1 if t_equal and p_equal else -1} arch=qwen2-0.5b "
+        f"stages={len(tlow.dag.stage_names)} batch={b} seq={s} "
+        f"pair_equal={1 if p_equal else -1} "
+        f"pair_placements=[{' | '.join(p.describe() for p in pplace.values())}]")
+
+
 def paper_figures() -> None:
     import paper_repro
     claims = paper_repro.main(scale=16)
@@ -689,6 +755,7 @@ def main(quick: bool = False, run_id: str | None = None) -> None:
     bench_preemptive(quick=quick)
     bench_online(quick=quick)
     bench_hetero(quick=quick)
+    bench_model_zoo(quick=quick)
     if not quick:
         bench_cc_vee()
         bench_schedule_quality()

@@ -1,11 +1,13 @@
-"""Serving driver: continuous batching where DaphneSched IS the batcher.
+"""Serving driver: request generation scheduled BY DaphneSched.
 
-Incoming requests are tasks (DESIGN.md §6.2): the request queue is drained
-in chunks sized by a DLS technique (GSS: big chunks while the backlog is
-deep, small near the tail — classic self-scheduling), decode slots are the
-workers, and finished slots self-schedule the next chunk. Runs a real small
-model end-to-end (prefill -> decode loop) and reports throughput + the
-queue's chunk trace.
+Incoming requests are the rows of a PipelineDAG stage (DESIGN.md §17):
+each row runs one request's prefill -> decode loop through fixed-shape
+batch-1 jits, the decode slots are the pool workers, and the stage's DLS
+technique sizes the admission chunks (GSS: big chunks while the backlog
+is deep, small near the tail — classic self-scheduling). The job enters
+through the §14 ``Submission`` front door, and the scheduled output is
+asserted bit-equal to the direct (unscheduled) generation of the same
+requests.
 
     PYTHONPATH=src python examples/serve_lm.py --requests 24
 """
@@ -23,17 +25,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import make_partitioner
+from repro.core import PipelineDAG, PipelineExecutor, make_config
+from repro.core.lower import row_stage
+from repro.core.submit import Submission
 from repro.models import Model
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
-    ap.add_argument("--slots", type=int, default=4, help="decode batch slots")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots = scheduler workers")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
-    ap.add_argument("--technique", default="GSS")
+    ap.add_argument("--config", default="gss/percore",
+                    help="make_config spec: technique[/layout[/victim]]")
     args = ap.parse_args()
 
     cfg = get_config("granite-8b").reduced()
@@ -46,37 +52,44 @@ def main() -> None:
     decode = jax.jit(model.decode_step, donate_argnums=(2,))
 
     rng = np.random.default_rng(0)
-    requests = [rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32)
-                for _ in range(args.requests)]
+    requests = np.stack([rng.integers(0, cfg.vocab_size, args.prompt_len)
+                         for _ in range(args.requests)]).astype(np.int32)
 
-    # DaphneSched as the admission scheduler: chunk sizes from the technique
-    part = make_partitioner(args.technique, args.requests, args.slots)
-    served, chunk_trace = 0, []
+    def generate(_ins, r):
+        """One request end-to-end (fixed batch-1 shapes; jit-cached)."""
+        sl = jnp.asarray(requests[r][None])
+        cache = model.init_cache(1, s_max, dtype=jnp.float32)
+        logits, cache = prefill(params, {"tokens": sl}, cache)
+        out = [jnp.argmax(logits[:, -1], -1)]
+        for t in range(args.gen_len - 1):
+            logits, cache = decode(params, out[-1][:, None], cache,
+                                   jnp.int32(args.prompt_len + t))
+            out.append(jnp.argmax(logits[:, 0], -1))
+        return np.asarray(jnp.stack(out)[:, 0], np.int32)  # (gen_len,)
+
+    # DaphneSched as the admission scheduler: rows = requests, chunk
+    # sizes from the stage's DLS technique, submitted via §14
+    dag = PipelineDAG([row_stage("generate", generate, args.requests)])
+    pool = make_config(args.config, n_workers=args.slots)
+    sub = Submission(dag=dag, name="serve-lm", tenant="lm",
+                     stage_costs={"generate": np.full(args.requests, 1.0)})
+    generate(None, 0)  # warm the jits outside the timed run
     t0 = time.perf_counter()
-    while served < args.requests:
-        n = min(part.next_chunk() or 1, args.requests - served)
-        chunk_trace.append(n)
-        batch_reqs = requests[served:served + n]
-        served += n
-        # pad the admission chunk to the slot count (static shapes)
-        pad = args.slots - (len(batch_reqs) % args.slots or args.slots)
-        toks = np.stack(batch_reqs + [batch_reqs[-1]] * pad)
-        for i in range(0, len(toks), args.slots):
-            sl = jnp.asarray(toks[i:i + args.slots])
-            cache = model.init_cache(sl.shape[0], s_max, dtype=jnp.float32)
-            logits, cache = prefill(params, {"tokens": sl}, cache)
-            out = [jnp.argmax(logits[:, -1], -1)]
-            for t in range(args.gen_len - 1):
-                tok = out[-1][:, None]
-                logits, cache = decode(params, tok, cache,
-                                       jnp.int32(args.prompt_len + t))
-                out.append(jnp.argmax(logits[:, 0], -1))
+    res = PipelineExecutor(dag, pool).run(sub)
     dt = time.perf_counter() - t0
+    tokens = np.asarray(res.values["generate"])  # (requests, gen_len)
 
+    # the scheduled path must reproduce direct generation bit-for-bit
+    check = min(3, args.requests)
+    direct = np.stack([generate(None, r) for r in range(check)])
+    assert np.array_equal(tokens[:check], direct), "scheduled != direct"
+
+    chunk_trace = [int(z) for _, z in res.stages["generate"].schedule]
     total_tokens = args.requests * args.gen_len
     print(f"served {args.requests} requests x {args.gen_len} tokens in {dt:.1f}s "
-          f"({total_tokens / dt:.1f} tok/s on 1 CPU core)")
-    print(f"admission chunks ({args.technique}): {chunk_trace} "
+          f"({total_tokens / dt:.1f} tok/s on 1 CPU core), "
+          f"steals={res.steals}")
+    print(f"admission chunks ({args.config}): {chunk_trace} "
           f"(self-scheduling: large while backlog is deep, small at the tail)")
 
 

@@ -1,9 +1,15 @@
 """End-to-end LM training driver: data pipeline (DaphneSched-scheduled) ->
-sharded train step -> fault-tolerant loop with checkpointing.
+scheduler-accumulated gradients -> fault-tolerant loop with checkpointing.
 
-Default is a ~25M-param model sized for this 1-core CPU container; pass
---d-model 768 --layers 12 --steps 300 for the ~100M configuration on real
-hardware (the code path is identical — mesh axes scale via --data/--model).
+The train step itself now runs THROUGH the scheduler (DESIGN.md §17):
+each step's batch is split into gradient microbatches that form the rows
+of a single-stage PipelineDAG (combine='sum'), submitted via the §14
+``Submission`` API — the pool's DLS technique chunks the microbatches,
+the stage accumulates the flat gradient vector, and the AdamW update is
+applied to the scheduler's sum. Default is a ~25M-param model sized for
+this 1-core CPU container; pass --d-model 768 --layers 12 --steps 300
+for the ~100M configuration on real hardware (the code path is identical
+— mesh axes scale via --data/--model).
 
     PYTHONPATH=src python examples/train_lm.py --steps 20
 """
@@ -18,15 +24,18 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
 
 from repro.configs import get_config
-from repro.core import SchedulerConfig
+from repro.core import (PipelineDAG, PipelineExecutor, SchedulerConfig, Stage,
+                        make_config)
+from repro.core.submit import Submission
 from repro.data import DataPipeline, SyntheticCorpus
 from repro.launch.mesh import make_host_mesh
 from repro.models import Model, count_params
-from repro.optim import AdamWConfig
-from repro.runtime import (axis_rules, build_train_step, init_train_state,
-                           make_policy)
+from repro.optim import AdamWConfig, apply_updates
+from repro.runtime import axis_rules, init_train_state, make_policy
 from repro.runtime.fault import FaultConfig, run_loop
 from repro.runtime.steps import TrainState
 
@@ -44,11 +53,18 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=4,
+                    help="gradient microbatches per step (scheduler rows)")
+    ap.add_argument("--sched", default="fac2",
+                    help="make_config spec for the gradient stage")
+    ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--data", type=int, default=1, help="mesh data axis")
     ap.add_argument("--model", type=int, default=1, help="mesh model axis")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--compress-grads", action="store_true")
     args = ap.parse_args()
+    if args.batch % args.microbatches:
+        ap.error("--batch must be divisible by --microbatches")
 
     base = get_config(args.arch)
     cfg = dataclasses.replace(
@@ -76,15 +92,58 @@ def main() -> None:
                                               n_workers=4,
                                               numa_domains=(0, 0, 1, 1)))
 
+    n_micro = args.microbatches
+    pool_cfg = make_config(args.sched, n_workers=args.workers)
+
     with axis_rules(mesh, policy.rules()):
         state = init_train_state(model, jax.random.key(0), opt_cfg)
-        train_step = jax.jit(build_train_step(model, opt_cfg))
+        _, unravel = ravel_pytree(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                         state.params))
+
+        def loss_fn(p, batch):
+            return model.train_loss(p, batch)
+
+        @jax.jit
+        def micro_grads(p, mtokens):
+            """One microbatch's [loss, flat grads] vector (f32)."""
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                p, {"tokens": mtokens})
+            gflat, _ = ravel_pytree(
+                jax.tree.map(lambda a: a.astype(jnp.float32), g))
+            return jnp.concatenate([loss[None].astype(jnp.float32), gflat])
+
+        @jax.jit
+        def apply_flat(state, summed):
+            loss = summed[0] / n_micro
+            grads = unravel(summed[1:] / n_micro)
+            new_p, new_opt, metrics = apply_updates(state.params, grads,
+                                                    state.opt, opt_cfg)
+            return (TrainState(params=new_p, opt=new_opt,
+                               step=state.step + 1),
+                    {**metrics, "loss": loss})
 
         losses = []
 
         def step_fn(state, batch):
-            batch = {"tokens": jnp.asarray(batch["tokens"])}
-            state, metrics = train_step(state, batch)
+            """One train step THROUGH the scheduler (§14 + §17)."""
+            toks = jnp.asarray(batch["tokens"])
+            mb = toks.reshape(n_micro, toks.shape[0] // n_micro, -1)
+
+            def grads_op(_inputs, s, z):
+                acc = None
+                for m in range(s, s + z):
+                    v = np.asarray(micro_grads(state.params, mb[m]))
+                    acc = v if acc is None else acc + v
+                return acc
+
+            dag = PipelineDAG([Stage("micrograds", n_micro, grads_op,
+                                     combine="sum")])
+            sub = Submission(dag=dag, name="train-step", tenant="train",
+                             stage_costs={"micrograds": np.full(n_micro, 1.0)})
+            res = PipelineExecutor(dag, pool_cfg).run(sub)
+            state, metrics = apply_flat(state,
+                                        jnp.asarray(res.values["micrograds"]))
             losses.append(float(metrics["loss"]))
             return state, metrics
 

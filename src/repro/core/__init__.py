@@ -90,6 +90,15 @@ from .device_schedule import (
     rebalance_dag,
 )
 from .executor import ExecutionStats, ScheduledExecutor, SchedulerConfig
+from .lower import (
+    Lowered,
+    chain_dag,
+    costs_from_sizes,
+    fanout_stage,
+    measure_stage_costs,
+    row_stage,
+    run_direct,
+)
 from .online import (
     SELECTORS,
     ChunkObservation,
@@ -174,6 +183,8 @@ __all__ = [
     "SchedulerConfig", "ScheduledExecutor", "ExecutionStats",
     "SimOverheads", "SimResult", "simulate", "DagSimResult", "simulate_dag",
     "frozen_dag_makespans", "ServerSimResult", "simulate_server",
+    "Lowered", "row_stage", "chain_dag", "fanout_stage", "run_direct",
+    "measure_stage_costs", "costs_from_sizes",
     "DEP_FULL", "DEP_ELEMENTWISE", "Stage", "StageDep", "PipelineDAG",
     "PipelineExecutor", "StageResult", "DagResult", "TaskEvent",
     "EventLog", "NullEventLog",

@@ -80,6 +80,13 @@ def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int):
 
 @dataclass
 class Model:
+    """Config-driven LM: init / forward / train_loss / prefill / decode_step.
+
+    One class covers every family in ``configs`` (dense, MoE, MLA, SSM,
+    RWKV, enc-dec, multimodal frontends); the config decides which layer
+    stack and cache layout ``_trunk`` builds.
+    """
+
     cfg: Any
 
     # ---- init ------------------------------------------------------------------

@@ -35,6 +35,13 @@ GOOD_ROWS = {
                                 "pop_margin5=58.08% steal_margin5=28.78% "
                                 "tasks=20000 reps=4 technique=GSS "
                                 "layout=PERCORE"),
+    "moe_dispatch_adaptive": (431.8,
+                              "equal=1 static_best=460us experts=32 "
+                              "tokens=384 hot_expert_tokens=144 "
+                              "vs_best_static=10.43%"),
+    "model_zoo_pipeline": (6031.9,
+                           "equal=1 batch=6 layers=24 "
+                           "pair_placements=[embed=host | embed=device]"),
     "device_dag_relower_cache": (281313.4,
                                  "cold=327207.1us warm=281313.4us "
                                  "lower_hits=5 lower_misses=1 table_hits=5 "
