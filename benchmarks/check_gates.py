@@ -68,6 +68,15 @@ row must never silently pass:
                                 the two-model §14 serving pair are both
                                 bit-equal to their direct oracles
                                 (equal=1)
+  telemetry_overhead            full tracing adds at most a 5% margin
+                                over the NullTracer run on the real pool
+                                (overhead_margin5 >= 0, paired record_raw
+                                x events estimate against the base min
+                                wall), traced results stay bit-equal to
+                                untraced (equal=1), and the critical-path
+                                analyzer telescopes to the traced
+                                makespan and reconciles against the
+                                independent DagStats accounting (recon=1)
 
 Gate kinds: a plain pattern string asserts its captured value >= 0; a
 ``("max_us", pattern, ceiling)`` entry asserts the captured value <=
@@ -125,6 +134,9 @@ GATES: dict[str, tuple] = {
     "moe_dispatch_adaptive": (r"equal=(-?[\d.]+)",
                               r"vs_best_static=(-?[\d.]+)%"),
     "model_zoo_pipeline": (r"equal=(-?[\d.]+)",),
+    "telemetry_overhead": (r"overhead_margin5=(-?[\d.]+)%",
+                           r"equal=(-?[\d.]+)",
+                           r"recon=(-?[\d.]+)"),
 }
 TOLERANCE = -1e-6  # simulator determinism should make these exact
 

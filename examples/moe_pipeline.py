@@ -25,7 +25,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.core import OnlineScheduler, select_offline_dag, simulate_dag
+from repro.core import (OnlineScheduler, Tracer, select_offline_dag,
+                        simulate_dag)
 from repro.core.autotune import tune_online_dag
 from repro.vee.ml_apps import moe_device_lowering, moe_dispatch_lowering
 
@@ -39,6 +40,10 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--device", action="store_true",
                     help="also run the expert stage through the device walker")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the online-bandit "
+                         "replay, including the moldable `resize` marks "
+                         "(docs/OBSERVABILITY.md)")
     args = ap.parse_args()
 
     low = moe_dispatch_lowering(n_tokens=args.tokens, skew=args.skew, seed=0,
@@ -67,12 +72,19 @@ def main() -> None:
     on = OnlineScheduler(seed=0)
     tuned = tune_online_dag(low.dag, low.stage_costs,
                             n_workers=args.workers, rounds=40, seed=0)
-    simulate_dag(low.dag, low.stage_costs, n_workers=args.workers, online=on)
+    tracer = Tracer(job="moe") if args.trace_out else None
+    simulate_dag(low.dag, low.stage_costs, n_workers=args.workers, online=on,
+                 tracer=tracer)
     gain = (statics[0] - tuned.makespan) / statics[0] * 100
     print(f"offline oracle: {assign['experts']} makespan={best:.0f}")
     print(f"online bandit:  makespan={tuned.makespan:.0f} "
           f"({gain:+.1f}% vs best static uniform {statics[0]:.0f}); "
           f"moldable resizes={on.resizes}")
+    if tracer is not None:
+        n_resize = sum(1 for s in tracer.spans() if s.kind == "resize")
+        tracer.write_chrome_trace(args.trace_out)
+        print(f"trace: {len(tracer)} events ({n_resize} resize marks) "
+              f"-> {args.trace_out}")
     if args.tokens >= 384 and args.experts >= 32:
         assert on.resizes.get("experts", 0) >= 1, "skew should force a resize"
 

@@ -4,9 +4,11 @@ mid-flight (bit-equal both ways), then put the ``preemptive`` arbiter
 under a deeply overloaded heavy-tailed trace and compare deadline
 hit-rates against plain non-preemptive weighted-fair.
 
-    PYTHONPATH=src python examples/preemptive_serving.py
+    PYTHONPATH=src python examples/preemptive_serving.py \
+        --trace-out preempt_trace.json
 """
 
+import argparse
 import sys
 from pathlib import Path
 
@@ -15,9 +17,17 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 from repro.core import (PipelineExecutor, PreemptiveRunner, SchedulerConfig,
-                        heavy_tailed_trace, migrate_to_device,
+                        Tracer, heavy_tailed_trace, migrate_to_device,
                         replay_open_loop, resume_on_host, run_device_prefix)
 from repro.vee.apps import linreg_device_lowering, run_device_dag
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--trace-out", default=None,
+                help="write a Chrome/Perfetto trace covering the checkpoint, "
+                     "resume, and host->device migration marks "
+                     "(docs/OBSERVABILITY.md)")
+args = ap.parse_args()
+tracer = Tracer(job="linreg") if args.trace_out else None
 
 # --- 1. checkpoint + resume on the host pool ------------------------------
 # the tile-unit linreg DAG under the bit-equality regime (SS, 1 worker);
@@ -26,12 +36,13 @@ low = linreg_device_lowering(256, 9, tile=64)
 cfg = SchedulerConfig(technique="SS", queue_layout="CENTRALIZED", n_workers=1)
 ref = PipelineExecutor(low.dag, cfg).run()
 
-_, ck = PreemptiveRunner(low.dag, cfg, preempt_after=2).run()
+_, ck = PreemptiveRunner(low.dag, cfg, preempt_after=2, job="linreg",
+                         tracer=tracer).run()
 print("— chunk-boundary checkpoint —")
 for name, sck in ck.stages.items():
     print(f"  {name:>10}: executed={sck.executed} "
           f"pending={len(sck.pending)} chunks ({sck.remaining_rows} tiles)")
-resumed = resume_on_host(ck, low.dag, cfg)
+resumed = resume_on_host(ck, low.dag, cfg, tracer=tracer)
 print("  host resume bit-equal:",
       all(np.array_equal(np.asarray(resumed.values[k]),
                          np.asarray(ref.values[k])) for k in ref.values))
@@ -41,12 +52,12 @@ print("  host resume bit-equal:",
 # walker (completed stages become operands, partial sums are seeded);
 # device -> host: freeze a super-table prefix, finish on the thread pool
 dev_ref, _ = run_device_dag(low, "SS")
-vals = migrate_to_device(ck, low)
+vals = migrate_to_device(ck, low, tracer=tracer)
 print("\n— mid-flight migration —")
 print("  host->device bit-equal:",
       all(np.array_equal(vals[k], dev_ref[k]) for k in dev_ref))
 ck_dev, _ = run_device_prefix(low, 3)
-fin = resume_on_host(ck_dev, low.dag, cfg)
+fin = resume_on_host(ck_dev, low.dag, cfg, tracer=tracer)
 print("  device->host bit-equal:",
       all(np.array_equal(np.asarray(fin.values[k]),
                          np.asarray(ref.values[k])) for k in ref.values))
@@ -68,3 +79,8 @@ print(f"  preemptive(fair):     hit={pre.deadline_hit_rate():.3f}  "
 first = next(e for e in pre.preemptions if e.kind == "preempt")
 print(f"  first preemption: t={first.t:.3f}s job={first.job} "
       f"({first.reason})")
+
+if tracer is not None:
+    kinds = sorted({s.kind for s in tracer.spans()})
+    tracer.write_chrome_trace(args.trace_out)
+    print(f"\ntrace: {len(tracer)} events, kinds={kinds} -> {args.trace_out}")

@@ -85,6 +85,7 @@ from .device_schedule import (
     cost_balanced_assignment,
     dag_signature,
     dag_table_cache_stats,
+    device_walk_spans,
     per_shard_tables,
     rebalance,
     rebalance_dag,
@@ -170,6 +171,21 @@ from .simulator import (
 )
 from .registry import REGISTRY, make, make_config, make_placement
 from .submit import Submission, as_submission
+from .telemetry import (
+    NULL_TRACER,
+    CriticalPathReport,
+    MetricsRegistry,
+    NullTracer,
+    Span,
+    Tracer,
+    analyze_critical_path,
+    as_tracer,
+    collect_bandit_metrics,
+    collect_cache_metrics,
+    collect_queue_metrics,
+    collect_server_metrics,
+    validate_chrome_trace,
+)
 from .task import RangeTask, tasks_from_schedule
 from .victim import VICTIM_STRATEGIES, VictimSelector, make_victim_selector
 
@@ -196,7 +212,7 @@ __all__ = [
     "cost_balanced_assignment",
     "DeviceDagTables", "build_dag_tables", "rebalance_dag",
     "dag_signature", "build_dag_tables_cached", "dag_table_cache_stats",
-    "clear_dag_table_cache",
+    "clear_dag_table_cache", "device_walk_spans",
     "select_offline", "OnlineTuner", "default_search_space",
     "select_offline_dag", "DagTuner", "select_offline_server",
     "select_offline_device_dag",
@@ -219,4 +235,8 @@ __all__ = [
     "StageCheckpoint", "JobCheckpoint", "PreemptableStageRun",
     "PreemptiveRunner", "resume_on_host", "migrate_to_device",
     "run_device_prefix", "PreemptionEvent", "PreemptiveArbiter",
+    "Tracer", "NullTracer", "NULL_TRACER", "as_tracer", "Span",
+    "MetricsRegistry", "CriticalPathReport", "analyze_critical_path",
+    "validate_chrome_trace", "collect_queue_metrics", "collect_cache_metrics",
+    "collect_bandit_metrics", "collect_server_metrics",
 ]

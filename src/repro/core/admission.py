@@ -70,6 +70,7 @@ from .server import (
 )
 from .simulator import SimOverheads, _combo_of, _pop_chunk, _SimStage
 from .submit import Submission, as_submission
+from .telemetry import as_tracer, collect_openloop_metrics
 
 __all__ = [
     "TokenBucket", "AdmissionDecision", "AdmissionController",
@@ -431,6 +432,8 @@ def replay_open_loop(
     overheads: SimOverheads = SimOverheads(),
     seed: int = 0,
     feedback=None,
+    tracer=None,
+    metrics=None,
 ) -> OpenLoopResult:
     """Replay a timestamped open-loop trace through the serving runtime.
 
@@ -454,7 +457,14 @@ def replay_open_loop(
     arrival order is taken from ``arrival_s``. Returns an
     ``OpenLoopResult`` with per-member outcomes and p50/p99/p99.9-ready
     latencies. Deterministic for a fixed trace and seed.
+
+    ``tracer`` (a core.telemetry.Tracer) records admission decisions,
+    batch flushes, chunk exec spans, and preemptions on one correlated
+    virtual timeline; ``metrics`` (a MetricsRegistry) receives the
+    drain-time counter snapshot via ``collect_openloop_metrics``.
     """
+    tracer = as_tracer(tracer)
+    traced = tracer.enabled
     subs = sorted((as_submission(s) for s in trace), key=lambda s: s.arrival_s)
     names = [s.name for s in subs]
     if len(set(names)) != len(names):
@@ -596,6 +606,9 @@ def replay_open_loop(
             n_coalesced[0] += len(mem)
             for m in mem:
                 members[m.name].batch = merged.name
+            if traced:
+                tracer.mark("batch", t, merged.name,
+                            detail=f"members={len(mem)}")
             add_engine_job(merged.replace(arrival_s=t), t, mem)
         wake(t)
 
@@ -613,7 +626,11 @@ def replay_open_loop(
                 if sub.deadline_s is not None:
                     mo.deadline_met = False   # shed deadline job = SLO miss
                 shed_reasons[dec.reason] = shed_reasons.get(dec.reason, 0) + 1
+                if traced:
+                    tracer.mark("shed", t, sub.name, detail=dec.reason)
                 return
+        if traced:
+            tracer.mark("admit", t, sub.name)
         outstanding[0] += float(
             sum(c.sum() for c in job_stage_costs(sub.to_job()).values()))
         if batching is not None and batching.batchable(sub):
@@ -699,11 +716,14 @@ def replay_open_loop(
         js, st = taken
         jname = js.job.name
         base_cost = st.chunk_cost[st.ptr]
-        tid, s0, z0, cost, _, t_end, wait = _pop_chunk(st, w, t, ov)
+        tid, s0, z0, cost, t_acc, t_end, wait = _pop_chunk(st, w, t, ov)
         queue_wait[0] += wait
         arb.charge(js, cost, t_end)
         busy[w] += cost
         n_chunks[0] += 1
+        if traced:
+            tracer.record_raw("exec", jname, st.name, tid, w, t_acc, t_end,
+                              0, wait)
         outstanding[0] = max(0.0, outstanding[0] - base_cost)
         job_cost_left[jname] = max(0.0, job_cost_left[jname] - base_cost)
         job_left[jname] -= 1
@@ -725,7 +745,11 @@ def replay_open_loop(
     n_shed = sum(shed_reasons.values())
     first_arrival = subs[0].arrival_s if subs else 0.0
     pool_timeline.append((last_completion[0], active))
-    return OpenLoopResult(
+    preemptions = list(getattr(arb, "preemption_log", []))
+    if traced:
+        for p in preemptions:
+            tracer.mark(p.kind, p.t, p.job, detail=p.reason)
+    result = OpenLoopResult(
         members=members, n_jobs=len(subs),
         n_admitted=len(subs) - n_shed, n_shed=n_shed,
         shed_reasons=shed_reasons, n_batches=n_batches[0],
@@ -733,7 +757,10 @@ def replay_open_loop(
         makespan_s=max(0.0, last_completion[0] - first_arrival),
         queue_wait_s=queue_wait[0], pool_timeline=pool_timeline,
         worker_busy_s=busy,
-        preemptions=list(getattr(arb, "preemption_log", [])))
+        preemptions=preemptions)
+    if metrics is not None:
+        collect_openloop_metrics(metrics, result)
+    return result
 
 
 # ---------------------------------------------------------------------------
@@ -845,13 +872,16 @@ class FrontDoor:
                  arbiter_kwargs: dict | None = None,
                  admission: AdmissionController | None = None,
                  batching: BatchPolicy | None = None,
-                 online=None):
+                 online=None, tracer=None, metrics=None):
         self.config = config
         self.admission = admission
         self.batching = batching
+        self.tracer = as_tracer(tracer)
+        self.metrics = metrics
         self._server = PipelineServer(config, arbiter=arbiter,
                                       arbiter_kwargs=arbiter_kwargs,
-                                      online=online)
+                                      online=online, tracer=self.tracer,
+                                      metrics=metrics)
         self._queued: list[Submission] = []
 
     def submit(self, sub) -> None:
@@ -872,6 +902,9 @@ class FrontDoor:
         n_workers = max(1, self.config.n_workers)
         n_batches = 0
 
+        tracer = self.tracer
+        traced = tracer.enabled
+
         def flush(key, t):
             """Close one batch window into a launch entry."""
             nonlocal n_batches
@@ -884,6 +917,9 @@ class FrontDoor:
             n_batches += 1
             merged = coalesce_submissions(
                 mem, name=f"batch{n_batches}({mem[0].name}x{len(mem)})")
+            if traced:
+                tracer.mark("batch", t, merged.name,
+                            detail=f"members={len(mem)}")
             launches.append((merged.replace(arrival_s=t), mem))
 
         for sub in subs:
@@ -899,7 +935,11 @@ class FrontDoor:
                                             n_workers)
                 if not dec.admitted:
                     shed[sub.name] = dec.reason
+                    if traced:
+                        tracer.mark("shed", t, sub.name, detail=dec.reason)
                     continue
+            if traced:
+                tracer.mark("admit", t, sub.name)
             committed += self.admission.estimate_service_s(sub.to_job()) \
                 if self.admission is not None else 0.0
             if self.batching is not None and self.batching.batchable(sub):

@@ -243,10 +243,10 @@ class NullEventLog(EventLog):
     """
 
     def append_raw(self, *fields) -> None:
-        pass
+        """No-op."""
 
     def append(self, ev) -> None:
-        pass
+        """No-op."""
 
 
 @dataclass
@@ -263,7 +263,14 @@ class StageResult:
 
 @dataclass
 class DagResult:
-    """Whole-DAG outcome: stage values/results, event timeline, pool stats."""
+    """Whole-DAG outcome: stage values/results, event timeline, pool stats.
+
+    ``transfer_events`` (core.placement.TransferEvent) and
+    ``preemptions`` (core.preempt.PreemptionEvent) are the uniform
+    cross-engine surfaces (§18): every result type exposes both, so
+    analysis code never cares which engine produced a run. Transfers
+    fold into ``stats``.
+    """
 
     values: dict[str, Any]
     stages: dict[str, StageResult]
@@ -272,6 +279,8 @@ class DagResult:
     steals: int
     per_worker_busy_s: list[float]
     per_worker_tasks: list[int]
+    transfer_events: list = field(default_factory=list)
+    preemptions: list = field(default_factory=list)
 
     def span(self, stage: str) -> tuple[float, float]:
         """(first chunk start, last chunk end) of ``stage``, seconds from run start."""
@@ -283,11 +292,15 @@ class DagResult:
     @property
     def stats(self):
         """Per-stage chunk accounting (a core.simulator.DagStats) built
-        from the event timeline: measured exec seconds and queue waits.
+        from the event timeline: measured exec seconds and queue waits,
+        with ``transfer_events`` folded into the transfer columns.
         A property so executor and simulator results read identically
         (``res.stats.total_exec_s`` on both)."""
         from .simulator import stats_from_events
-        return stats_from_events(self.events)
+        st = stats_from_events(self.events)
+        for ev in self.transfer_events:
+            st.add_transfer(ev.consumer, ev.t_end - ev.t_start)
+        return st
 
     def overlap_s(self, a: str, b: str) -> float:
         """Seconds during which stages ``a`` and ``b`` were both active."""
@@ -523,10 +536,12 @@ class PipelineExecutor:
     """
 
     def __init__(self, dag: PipelineDAG, config: SchedulerConfig,
-                 record_events: bool = True):
+                 record_events: bool = True, tracer=None):
+        from .telemetry import as_tracer
         self.dag = dag
         self.config = config
         self.record_events = record_events
+        self.tracer = as_tracer(tracer)
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
 
@@ -571,6 +586,9 @@ class PipelineExecutor:
         cond = threading.Condition()
         remaining_total = sum(sr.remaining for sr in order)
         events = EventLog() if self.record_events else NullEventLog()
+        tracer = self.tracer
+        traced = tracer.enabled
+        tjob = tracer.job
         errors: list[BaseException] = []
         busy = [0.0] * n_workers
         ntasks = [0] * n_workers
@@ -586,6 +604,9 @@ class PipelineExecutor:
             remaining_total -= 1
             events.append_raw(sr.stage.name, i, s, z, wid, rel0, rel1,
                               stolen, wait_s)
+            if traced:
+                tracer.record_raw("exec", tjob, sr.stage.name, i, wid,
+                                  rel0, rel1, 1 if stolen else 0, wait_s)
             busy[wid] += dt
             ntasks[wid] += 1
             steals[0] += int(stolen)
@@ -597,6 +618,9 @@ class PipelineExecutor:
                         resizes_done=sr.resizes)
                     if plan:
                         remaining_total += sr.resize_remaining(plan)
+                        if traced:
+                            tracer.mark("resize", rel1, tjob, sr.stage.name,
+                                        detail=f"chunks={len(plan)}")
 
         def worker(wid: int) -> None:
             """Pool thread: rotate over stages, pop runnable chunks, execute."""

@@ -66,6 +66,10 @@ class ExecutionStats:
     # pop_local + steal attempts under PERCORE/PERGROUP — the pop-traffic
     # axis on which queue layouts are compared.
     queue_pops: int = 0
+    # total measured queue wait (idle-to-next-task gaps summed over
+    # workers) — populated identically on the slot and deque impls so the
+    # differential tests can compare them.
+    queue_wait_s: float = 0.0
 
     @property
     def load_imbalance(self) -> float:
@@ -89,13 +93,16 @@ class ScheduledExecutor:
     """
 
     def __init__(self, config: SchedulerConfig, observer=None,
-                 observer_stage: str = "flat"):
+                 observer_stage: str = "flat", tracer=None):
+        from .telemetry import as_tracer
+
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
         self._observe = (observer.record if hasattr(observer, "record")
                          else observer)
         self._observer_stage = observer_stage
+        self.tracer = as_tracer(tracer)
 
     def run(self, tasks: list[RangeTask]) -> tuple[dict[int, object], ExecutionStats]:
         """Run ``tasks`` to completion; returns ({task_id: value}, stats)."""
@@ -107,7 +114,12 @@ class ScheduledExecutor:
             per_worker_busy_s=[0.0] * cfg.n_workers,
         )
 
-        def record(worker_id: int, task: RangeTask) -> None:
+        tracer = self.tracer
+        traced = tracer.enabled
+        tjob = tracer.job
+
+        def record(worker_id: int, task: RangeTask,
+                   wait_s: float = 0.0, stolen: bool = False) -> None:
             """Run one task and fold its result/stats in (worker thread)."""
             t0 = time.perf_counter()
             value = task.run()
@@ -117,10 +129,15 @@ class ScheduledExecutor:
                 results[task.task_id] = value
                 stats.per_worker_tasks[worker_id] += 1
                 stats.per_worker_busy_s[worker_id] += dt
+                stats.queue_wait_s += wait_s
                 if self._observe is not None:
                     self._observe(ChunkObservation(
                         self._observer_stage, task.task_id, task.start,
                         task.size, dt, worker_id, t1 - t_start))
+            if traced:
+                tracer.record_raw("exec", tjob, self._observer_stage,
+                                  task.task_id, worker_id, t0 - t_start,
+                                  t1 - t_start, 1 if stolen else 0, wait_s)
 
         t_start = time.perf_counter()
         slot = cfg.queue_impl == "slot"
@@ -131,12 +148,16 @@ class ScheduledExecutor:
 
                 def worker(worker_id: int) -> None:
                     """Drain chunk ranges off the slot-array queue."""
+                    t_idle = time.perf_counter()
                     while True:
                         h, e = queue.pop_range(worker_id)
                         if h == e:
                             return
+                        wait = time.perf_counter() - t_idle
                         for t in tasks[h:e]:
-                            record(worker_id, t)
+                            record(worker_id, t, wait)
+                            wait = 0.0
+                        t_idle = time.perf_counter()
             else:
                 part = make_partitioner(cfg.technique, len(tasks),
                                         cfg.n_workers, seed=cfg.seed)
@@ -144,12 +165,16 @@ class ScheduledExecutor:
 
                 def worker(worker_id: int) -> None:
                     """Drain technique-sized chunks off the shared queue."""
+                    t_idle = time.perf_counter()
                     while True:
                         chunk = queue.pop(worker_id)
                         if not chunk:
                             return
+                        wait = time.perf_counter() - t_idle
                         for t in chunk:
-                            record(worker_id, t)
+                            record(worker_id, t, wait)
+                            wait = 0.0
+                        t_idle = time.perf_counter()
 
             self._run_threads(worker, cfg.n_workers)
             stats.contended_pops = queue.contended_pops
@@ -174,11 +199,17 @@ class ScheduledExecutor:
                     the victim's tail run into the home buffer (one int32
                     copy, no task materialization on the queue op)."""
                     home = queues.owner_of(worker_id)
+                    t_idle = time.perf_counter()
+                    just_stole = False
                     while True:
                         got = queues.pop_local_idx(worker_id)
                         if len(got):
+                            wait = time.perf_counter() - t_idle
                             for i in got:
-                                record(worker_id, table[i])
+                                record(worker_id, table[i], wait, just_stole)
+                                wait = 0.0
+                            t_idle = time.perf_counter()
+                            just_stole = False
                             continue
                         moved = 0
                         for victim in selector.candidates(home):
@@ -187,15 +218,22 @@ class ScheduledExecutor:
                                 break
                         if not moved:
                             return  # global exhaustion
+                        just_stole = True
             else:
                 def worker(worker_id: int) -> None:
                     """Drain the home queue chunk-wise, then steal in victim order."""
                     home = queues.owner_of(worker_id)
+                    t_idle = time.perf_counter()
+                    just_stole = False
                     while True:
                         chunk = queues.pop_local(worker_id)
                         if chunk:
+                            wait = time.perf_counter() - t_idle
                             for t in chunk:
-                                record(worker_id, t)
+                                record(worker_id, t, wait, just_stole)
+                                wait = 0.0
+                            t_idle = time.perf_counter()
+                            just_stole = False
                             continue
                         # out of local work: steal (victim order per strategy)
                         stolen: list[RangeTask] = []
@@ -206,6 +244,7 @@ class ScheduledExecutor:
                         if not stolen:
                             return  # global exhaustion
                         queues.push_local(worker_id, stolen)
+                        just_stole = True
 
             self._run_threads(worker, cfg.n_workers)
             stats.steals = queues.steals

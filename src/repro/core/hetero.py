@@ -60,8 +60,8 @@ from .dag import (
 )
 from .executor import SchedulerConfig
 from .online import rechunk_pending
-from .placement import Placement
-from .simulator import DagStats, stats_from_events
+from .placement import Placement, TransferEvent
+from .telemetry import F_DEVICE, F_STOLEN, as_tracer
 
 __all__ = ["HeteroExecutor", "HeteroResult", "split_device_tasks",
            "pop_device_task", "steal_device_tail"]
@@ -177,8 +177,12 @@ class HeteroResult(DagResult):
     host workers first, then the ``n_device`` walker lanes.
     ``absorbed_by_host`` / ``absorbed_by_device`` count cross-substrate
     rebalancing moves; ``cross_consumptions`` counts chunks that consumed
-    at least one row the other substrate produced (the streaming edges a
-    real deployment would transfer — ``DagStats.transfers``).
+    at least one row the other substrate produced. Each such consumption
+    also lands as a ``TransferEvent`` in ``transfer_events`` (zero
+    duration — the copy is not separately timed on the threaded pool), so
+    the inherited ``DagResult.stats`` folds the same counts into
+    ``DagStats.transfers``/``transfer_s`` that the hetero simulator
+    reports.
     """
 
     n_host_workers: int = 0
@@ -187,15 +191,6 @@ class HeteroResult(DagResult):
     absorbed_by_device: int = 0
     cross_consumptions: dict[str, int] = field(default_factory=dict)
     placement: Placement | None = None
-
-    @property
-    def stats(self) -> DagStats:
-        """Measured per-stage accounting, cross-substrate edges included."""
-        stats = stats_from_events(self.events)
-        for stage, n in self.cross_consumptions.items():
-            stats.transfers[stage] = stats.transfers.get(stage, 0) + n
-            stats.transfer_s.setdefault(stage, 0.0)
-        return stats
 
 
 class HeteroExecutor:
@@ -218,6 +213,7 @@ class HeteroExecutor:
         placement: Placement,
         n_device: int = 1,
         rebalance: bool = True,
+        tracer=None,
     ):
         self.dag = dag
         self.config = config
@@ -226,6 +222,7 @@ class HeteroExecutor:
         self._domains = list(d) if d is not None else [0] * config.n_workers
         self.n_device = max(1, n_device)
         self.rebalance = rebalance
+        self.tracer = as_tracer(tracer)
 
     def run(self, sub=None) -> HeteroResult:
         """Execute every stage to completion across both substrates.
@@ -268,7 +265,8 @@ class HeteroExecutor:
                     self.config,
                     sub.placement if sub.placement is not None
                     else self.placement,
-                    n_device=self.n_device, rebalance=self.rebalance)
+                    n_device=self.n_device, rebalance=self.rebalance,
+                    tracer=self.tracer)
                 return ex._run(sub.replace(dag=None, placement=None),
                                preempt_after)
             overrides.update(sub.per_stage or {})
@@ -308,6 +306,10 @@ class HeteroExecutor:
 
         cond = threading.Condition()
         events = EventLog(TaskEvent)
+        tracer = self.tracer
+        traced = tracer.enabled
+        tjob = tracer.job
+        transfers: list[TransferEvent] = []
         errors: list[BaseException] = []
         busy = [0.0] * n_lanes
         ntasks = [0] * n_lanes
@@ -318,8 +320,8 @@ class HeteroExecutor:
         stop = [False]      # §15: lanes stop popping at the next boundary
         t0_run = time.perf_counter()
 
-        def consumed_cross(sr: _StageRun, task, is_dev: bool) -> bool:
-            """Did this chunk consume rows the other substrate produced?"""
+        def consumed_cross(sr: _StageRun, task, is_dev: bool) -> str | None:
+            """Producer whose rows crossed the substrate boundary, or None."""
             _, s, z = task
             me = 1 if is_dev else 0
             for d in sr.stage.deps:
@@ -331,10 +333,10 @@ class HeteroExecutor:
                     if key not in full_cross:
                         full_cross[key] = bool((side != me).any())
                     if full_cross[key]:
-                        return True
+                        return d.producer
                 elif (side[s:s + z] != me).any():
-                    return True
-            return False
+                    return d.producer
+            return None
 
         def record(sr, task, value, dt, lane, rel0, rel1, stolen, wait_s,
                    is_dev):
@@ -360,6 +362,11 @@ class HeteroExecutor:
                     sr.acc = sr.value = acc
             remaining_total -= 1
             events.append_raw(name, i, s, z, lane, rel0, rel1, stolen, wait_s)
+            if traced:
+                tracer.record_raw(
+                    "exec", tjob, name, i, lane, rel0, rel1,
+                    (F_STOLEN if stolen else 0) | (F_DEVICE if is_dev else 0),
+                    wait_s)
             busy[lane] += dt
             ntasks[lane] += 1
             steals[0] += int(stolen)
@@ -448,9 +455,20 @@ class HeteroExecutor:
                         record(sr, task, value, t1 - t0, lane,
                                t0 - t0_run, t1 - t0_run,
                                stolen or was_absorbed, t0 - t_idle, is_dev)
-                        if is_cross:
+                        if is_cross is not None:
                             cross[sr.stage.name] = \
                                 cross.get(sr.stage.name, 0) + 1
+                            # zero duration: the threaded pool shares
+                            # memory, the copy is not separately timed
+                            transfers.append(TransferEvent(
+                                is_cross, sr.stage.name, z,
+                                t0 - t0_run, t0 - t0_run, is_dev))
+                            if traced:
+                                tracer.record_raw(
+                                    "transfer", tjob, sr.stage.name,
+                                    task[0], lane, t0 - t0_run, t0 - t0_run,
+                                    F_DEVICE if is_dev else 0, 0.0,
+                                    f"from={is_cross}")
                         cond.notify_all()
             except BaseException as e:  # surfaced to the caller below
                 with cond:
@@ -495,6 +513,9 @@ class HeteroExecutor:
                                substrate="hetero", taken_at=wall,
                                reason="preempt_after")
             ck.validate(self.dag)
+            if traced:
+                tracer.mark("checkpoint", wall, tjob,
+                            detail="preempt_after")
             return None, ck
 
         stage_results = {
@@ -509,5 +530,6 @@ class HeteroExecutor:
             steals=steals[0], per_worker_busy_s=busy, per_worker_tasks=ntasks,
             n_host_workers=n_workers, n_device=n_device,
             absorbed_by_host=absorbed[0], absorbed_by_device=absorbed[1],
-            cross_consumptions=cross, placement=self.placement)
+            cross_consumptions=cross, placement=self.placement,
+            transfer_events=transfers)
         return res, None

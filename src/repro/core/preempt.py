@@ -47,10 +47,11 @@ from typing import Any, Callable
 
 import numpy as np
 
-from .dag import (DagResult, PipelineDAG, StageResult, TaskEvent, _StageRun,
-                  _resolve_stage_config, _stage_inputs, _try_pop)
+from .dag import (DagResult, EventLog, PipelineDAG, StageResult, TaskEvent,
+                  _StageRun, _resolve_stage_config, _stage_inputs, _try_pop)
 from .online import rechunk_pending
 from .server import Arbiter
+from .telemetry import F_STOLEN, as_tracer
 
 __all__ = [
     "StageCheckpoint", "JobCheckpoint", "PreemptableStageRun",
@@ -318,7 +319,7 @@ class PreemptiveRunner:
                  preempt_after: int | None = None,
                  trigger: Callable[[int], bool] | None = None,
                  rechunk_target: int | None = None,
-                 job: str = "job"):
+                 job: str = "job", tracer=None):
         self.dag = dag
         self.config = config
         d = config.numa_domains
@@ -327,6 +328,7 @@ class PreemptiveRunner:
         self.trigger = trigger
         self.rechunk_target = rechunk_target
         self.job = job
+        self.tracer = as_tracer(tracer)
 
     def _want_preempt(self, n_done: int) -> bool:
         if self.preempt_after is not None and n_done >= self.preempt_after:
@@ -354,7 +356,11 @@ class PreemptiveRunner:
         n_workers = self.config.n_workers
         cond = threading.Condition()
         remaining_total = sum(sr.remaining for sr in order)
-        events: list[TaskEvent] = []
+        events = EventLog(TaskEvent)
+        tracer = self.tracer
+        traced = tracer.enabled
+        if traced and resume_from is not None:
+            tracer.mark("resume", 0.0, self.job, detail=resume_from.reason)
         errors: list[BaseException] = []
         busy = [0.0] * n_workers
         ntasks = [0] * n_workers
@@ -368,8 +374,12 @@ class PreemptiveRunner:
             i, s, z = task
             sr.record(task, value, dt, rel0, rel1)
             remaining_total -= 1
-            events.append(TaskEvent(sr.stage.name, i, s, z, wid, rel0, rel1,
-                                    stolen, wait_s))
+            events.append_raw(sr.stage.name, i, s, z, wid, rel0, rel1,
+                              stolen, wait_s)
+            if traced:
+                tracer.record_raw("exec", self.job, sr.stage.name, i, wid,
+                                  rel0, rel1, F_STOLEN if stolen else 0,
+                                  wait_s)
             busy[wid] += dt
             ntasks[wid] += 1
             steals[0] += int(stolen)
@@ -433,6 +443,9 @@ class PreemptiveRunner:
                 stages={n: runs[n].checkpoint() for n in self.dag.order},
                 substrate="host", taken_at=wall, reason="trigger")
             ck.validate(self.dag)
+            if traced:
+                tracer.mark("checkpoint", wall, self.job,
+                            detail=f"chunks_left={ck.remaining_chunks}")
             return None, ck
         stage_results = {
             name: StageResult(value=sr.value, schedule=sr.schedule,
@@ -448,9 +461,10 @@ class PreemptiveRunner:
 
 
 def resume_on_host(ck: JobCheckpoint, dag: PipelineDAG, config,
-                   overrides=None) -> DagResult:
+                   overrides=None, tracer=None) -> DagResult:
     """Run a checkpoint's remainder to completion on the host pool."""
-    res, left = PreemptiveRunner(dag, config, job=ck.job).run(
+    res, left = PreemptiveRunner(dag, config, job=ck.job,
+                                 tracer=tracer).run(
         resume_from=ck, overrides=overrides)
     assert left is None  # no trigger installed, the run cannot re-preempt
     return res
@@ -471,7 +485,8 @@ def _tile_sets(ck: JobCheckpoint) -> dict[str, set[int]]:
     return pending
 
 
-def migrate_to_device(ck: JobCheckpoint, lowering, interpret: bool = True):
+def migrate_to_device(ck: JobCheckpoint, lowering, interpret: bool = True,
+                      tracer=None):
     """Resume a host checkpoint on the device walker, bit-equal.
 
     ``lowering`` is the vee ``DeviceLowering`` whose tile-unit host DAG
@@ -599,6 +614,10 @@ def migrate_to_device(ck: JobCheckpoint, lowering, interpret: bool = True):
                 values[prod] = np.asarray(sck.out, dtype=p.out_dtype).reshape(
                     tuple(p.out_shape))
 
+    tracer = as_tracer(tracer)
+    if tracer.enabled:
+        tracer.mark("migrate", float(ck.taken_at), ck.job,
+                    detail=f"to_device slots={len(new_table)}")
     if len(new_table):
         scaled = new_table.copy()
         scaled[:, 1:] *= tile

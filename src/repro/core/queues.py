@@ -86,6 +86,11 @@ class CentralizedQueue:
         with self._lock:
             return len(self._tasks)
 
+    def counters(self) -> dict[str, int]:
+        """Uniform counter snapshot for core.telemetry collectors."""
+        return {"pops": self.pops, "contended_pops": self.contended_pops,
+                "depth": len(self)}
+
 
 class _WorkerQueue:
     __slots__ = ("dq", "lock", "partitioner", "chunks", "pops", "steals",
@@ -287,6 +292,11 @@ class DistributedQueues:
     def __len__(self) -> int:
         return sum(self.queue_sizes())
 
+    def counters(self) -> dict[str, int]:
+        """Uniform counter snapshot for core.telemetry collectors."""
+        return {"pops": self.local_pops, "steals": self.steals,
+                "failed_steals": self.failed_steals, "depth": len(self)}
+
 
 class SlotCentralizedQueue:
     """Slot-array centralized queue: head cursor over a frozen chunk table.
@@ -343,6 +353,11 @@ class SlotCentralizedQueue:
     def __len__(self) -> int:
         with self._lock:
             return len(self._tasks) - self._head
+
+    def counters(self) -> dict[str, int]:
+        """Uniform counter snapshot for core.telemetry collectors."""
+        return {"pops": self.pops, "contended_pops": self.contended_pops,
+                "depth": len(self)}
 
 
 _EMPTY_IDX = np.empty(0, dtype=np.int32)
@@ -676,6 +691,11 @@ class SlotDistributedQueues:
 
     def __len__(self) -> int:
         return sum(self.queue_sizes())
+
+    def counters(self) -> dict[str, int]:
+        """Uniform counter snapshot for core.telemetry collectors."""
+        return {"pops": self.local_pops, "steals": self.steals,
+                "failed_steals": self.failed_steals, "depth": len(self)}
 
 
 QUEUE_LAYOUTS = ("CENTRALIZED", "PERCORE", "PERGROUP")

@@ -264,7 +264,14 @@ def make_arbiter(spec: str | Arbiter, **kwargs) -> Arbiter:
 
 @dataclass(frozen=True)
 class ServerTaskEvent:
-    """One executed chunk on the serving timeline (job-level TaskEvent)."""
+    """One executed chunk on the serving timeline (job-level TaskEvent).
+
+    ``wait_s`` is the lane's idle/contention time between finishing its
+    previous chunk and starting this one — the host-queue-wait signal
+    ``stats_from_events`` aggregates (it was silently 0 on the server
+    path before §18; the threaded pool and the virtual-time replay now
+    both populate it).
+    """
 
     job: str
     tenant: str
@@ -277,6 +284,7 @@ class ServerTaskEvent:
     t_end: float
     stolen: bool = False
     boosted: bool = False  # starvation guard lifted this job past priority
+    wait_s: float = 0.0
 
 
 @dataclass
@@ -306,6 +314,7 @@ class ServerResult:
     steals: int
     tenant_service_s: dict[str, float]
     preemptions: list = field(default_factory=list)  # §15 PreemptionEvents
+    transfer_events: list = field(default_factory=list)  # §13 TransferEvents
 
     def latencies(self) -> dict[str, float]:
         """Job name -> latency (finish minus arrival) in seconds."""
@@ -314,6 +323,17 @@ class ServerResult:
     def latency_percentile(self, q: float) -> float:
         """Percentile ``q`` (0-100) over per-job latencies."""
         return float(np.percentile(list(self.latencies().values()), q))
+
+    @property
+    def stats(self):
+        """Per-stage chunk accounting (core.simulator.DagStats) across
+        every job, transfers folded in — the same surface DagResult and
+        the simulators expose (§18 uniformity)."""
+        from .simulator import stats_from_events
+        st = stats_from_events(self.events)
+        for ev in self.transfer_events:
+            st.add_transfer(ev.consumer, ev.t_end - ev.t_start)
+        return st
 
 
 class PipelineServer:
@@ -355,7 +375,10 @@ class PipelineServer:
                  arbiter_kwargs: dict | None = None,
                  online=None,
                  n_device: int = 1,
-                 record_events: bool = True):
+                 record_events: bool = True,
+                 tracer=None,
+                 metrics=None):
+        from .telemetry import as_tracer
         self.config = config
         d = config.numa_domains
         self._domains = list(d) if d is not None else [0] * config.n_workers
@@ -364,6 +387,8 @@ class PipelineServer:
         self._online = online
         self._n_device = max(1, n_device)
         self.record_events = record_events
+        self.tracer = as_tracer(tracer)
+        self.metrics = metrics
         self._queued: list = []
 
     def submit(self, sub) -> None:
@@ -422,6 +447,7 @@ class PipelineServer:
         unbuilt = [0]       # stage runs not built yet (lazy/online mode)
         events = (EventLog(ServerTaskEvent) if self.record_events
                   else NullEventLog(ServerTaskEvent))
+        tracer = self.tracer
         errors: list[BaseException] = []
         busy = [0.0] * n_lanes
         ntasks = [0] * n_lanes
@@ -597,6 +623,7 @@ class PipelineServer:
             try:
                 while True:
                     choice = None
+                    t_idle = time.perf_counter()
                     with cond:
                         while True:
                             if errors or (total_left[0] == 0
@@ -620,7 +647,8 @@ class PipelineServer:
                         self._record(js, sr, task, value, t0 - t0_run,
                                      t1 - t0_run, wid, stolen, boosted,
                                      arbiter, events, busy, ntasks,
-                                     job_tasks, job_end, steals)
+                                     job_tasks, job_end, steals,
+                                     t0 - t_idle, wid >= n_workers, tracer)
                         job_left[js.job.name] -= 1
                         total_left[0] -= 1
                         if online is not None:
@@ -634,6 +662,11 @@ class PipelineServer:
                                     delta = sr.resize_remaining(plan)
                                     job_left[js.job.name] += delta
                                     total_left[0] += delta
+                                    if tracer.enabled:
+                                        tracer.mark(
+                                            "resize", t1 - t0_run,
+                                            js.job.name, sr.stage.name,
+                                            detail=f"chunks={len(plan)}")
                         if (job_left[js.job.name] == 0
                                 and job_unbuilt[js.job.name] == 0):
                             finish_job(js, job_end[js.job.name])
@@ -670,23 +703,39 @@ class PipelineServer:
                 tenant_service.get(js.job.tenant, 0.0) + js.service)
         arrivals = [js.arrival for js in states]
         finishes = [r.finish_s for r in results.values()]
-        return ServerResult(
+        result = ServerResult(
             jobs=results, events=events, wall_time_s=wall,
             makespan_s=(max(finishes) - min(arrivals)) if states else 0.0,
             per_worker_busy_s=busy, per_worker_tasks=ntasks,
             steals=steals[0], tenant_service_s=tenant_service,
             preemptions=list(getattr(arbiter, "preemption_log", [])))
+        if tracer.enabled:
+            for p in result.preemptions:
+                tracer.mark(p.kind, p.t, p.job, detail=p.reason)
+        if self.metrics is not None:
+            from .telemetry import (collect_bandit_metrics,
+                                    collect_server_metrics)
+            collect_server_metrics(self.metrics, result)
+            if online is not None:
+                collect_bandit_metrics(self.metrics, online)
+        return result
 
     @staticmethod
     def _record(js, sr, task, value, rel0, rel1, wid, stolen, boosted,
-                arbiter, events, busy, ntasks, job_tasks, job_end, steals):
+                arbiter, events, busy, ntasks, job_tasks, job_end, steals,
+                wait_s=0.0, is_dev=False, tracer=None):
         """Fold one chunk into stage/job/arbiter accounting (lock held)."""
         i, s, z = task
         dt = rel1 - rel0
         sr.record(task, value, dt, rel0, rel1)
         arbiter.charge(js, dt, rel1)
         events.append_raw(js.job.name, js.job.tenant, sr.stage.name, i, s, z,
-                          wid, rel0, rel1, stolen, boosted)
+                          wid, rel0, rel1, stolen, boosted, wait_s)
+        if tracer is not None and tracer.enabled:
+            tracer.record_raw("exec", js.job.name, sr.stage.name, i, wid,
+                              rel0, rel1,
+                              (1 if stolen else 0) | (2 if is_dev else 0),
+                              wait_s)
         busy[wid] += dt
         ntasks[wid] += 1
         job_tasks[js.job.name] += 1

@@ -446,7 +446,7 @@ def _resolve_row_costs(dag, stage_costs) -> dict[str, np.ndarray]:
 
 
 def _simulate_frozen(ddt: DeviceDagTables, costs: dict[str, np.ndarray],
-                     ov: SimOverheads) -> DagSimResult:
+                     ov: SimOverheads, tracer=None) -> DagSimResult:
     """Replay per-shard super-tables: the device walker in virtual time.
 
     Each shard drains its frozen slot sequence with no queue (h_local per
@@ -454,6 +454,11 @@ def _simulate_frozen(ddt: DeviceDagTables, costs: dict[str, np.ndarray],
     launch); the makespan is the slowest shard. Slot order already
     encodes the DAG's edges (build_dag_tables), so no gating is needed.
     """
+    from .telemetry import F_DEVICE, as_tracer
+
+    tracer = as_tracer(tracer)
+    traced = tracer.enabled
+    tjob = tracer.job
     names = list(ddt.stage_names)
     start = {n: math.inf for n in names}
     finish = {n: 0.0 for n in names}
@@ -462,14 +467,18 @@ def _simulate_frozen(ddt: DeviceDagTables, costs: dict[str, np.ndarray],
     stats = DagStats()
     for sh in range(ddt.n_shards):
         t = ov.h_launch
-        for sid, s0, z in ddt.slots(sh):
+        for slot, (sid, s0, z) in enumerate(ddt.slots(sh)):
             name = names[sid]
             c = float(costs[name][s0:s0 + z].sum())
             start[name] = min(start[name], t)
+            t0 = t
             t += ov.h_local + c
             finish[name] = max(finish[name], t)
             busy[sh] += c
             stats.add_chunk(name, c)
+            if traced:
+                tracer.record_raw("exec", tjob, name, slot, sh, t0, t,
+                                  F_DEVICE, 0.0, f"rows={s0}:{s0 + z}")
         shard_end[sh] = t
     return DagSimResult(
         makespan=max(shard_end, default=0.0), per_worker_busy=busy,
@@ -518,6 +527,7 @@ def simulate_dag(
     tile: int = 1,
     n_shards: int | None = None,
     online=None,
+    tracer=None,
 ) -> DagSimResult:
     """Simulate a PipelineDAG run on ``n_workers`` shared workers.
 
@@ -551,6 +561,10 @@ def simulate_dag(
     pool would — so selector/resizer convergence is testable
     deterministically. Not supported on the frozen device path (device
     tables are immutable by construction).
+
+    ``tracer`` (a core.telemetry.Tracer) records one virtual-time exec
+    span per chunk — same identity scheme as the real pool — so
+    ``analyze_critical_path`` reconciles against simulated DagStats too.
     """
     names = dag.stage_names
     if stage_costs is None:
@@ -574,8 +588,13 @@ def simulate_dag(
                 techniques[n] = cfg if isinstance(cfg, str) else _combo_of(cfg)[0]
             ddt = build_dag_tables_cached(dag, tile, techniques,
                                           n_shards=n_shards or 1, seed=seed)
-        return _simulate_frozen(ddt, row_costs, overheads)
+        return _simulate_frozen(ddt, row_costs, overheads, tracer=tracer)
 
+    from .telemetry import as_tracer
+
+    tracer = as_tracer(tracer)
+    traced = tracer.enabled
+    tjob = tracer.job
     row_costs = _resolve_row_costs(dag, stage_costs)
     stages: dict[str, _SimStage] = {}
     for n in names:
@@ -635,12 +654,15 @@ def simulate_dag(
             continue
         idx, st = taken
         cursor[w] = (idx + 1) % nstages
-        tid, s0, z0, cost, _, t_end, wait = _pop_chunk(st, w, t, ov)
+        tid, s0, z0, cost, t_acc, t_end, wait = _pop_chunk(st, w, t, ov)
         queue_wait += wait
         stats.add_chunk(st.name, cost, wait)
         busy[w] += cost
         last_completion = max(last_completion, t_end)
         remaining -= 1
+        if traced:
+            tracer.record_raw("exec", tjob, st.name, tid, w, t_acc, t_end,
+                              0, wait)
         heapq.heappush(heap, (t_end, w))
         if online is not None:
             online.record(ChunkObservation(st.name, tid, s0, z0, cost, w, t_end))
@@ -658,6 +680,9 @@ def simulate_dag(
                         float(rc[ps:ps + pz].sum()) for ps, pz in plan]
                     st.resizes += 1
                     remaining += len(plan) - old
+                    if traced:
+                        tracer.mark("resize", t_end, tjob, st.name,
+                                    detail=f"chunks={len(plan)}")
         # a take advances a FIFO head (and row fills become visible as the
         # clock reaches their t_end): re-scan parked workers now
         if pending:
@@ -707,6 +732,7 @@ def simulate_server(
     arbiter_kwargs: dict | None = None,
     overheads: SimOverheads = SimOverheads(),
     seed: int = 0,
+    tracer=None,
 ) -> ServerSimResult:
     """Replay mixed Job arrivals through the serving runtime in virtual time.
 
@@ -730,7 +756,10 @@ def simulate_server(
     """
     from .server import JobState, ServerTaskEvent, job_stage_costs, make_arbiter
     from .submit import Submission
+    from .telemetry import as_tracer
 
+    tracer = as_tracer(tracer)
+    traced = tracer.enabled
     jobs = [j.to_job() if isinstance(j, Submission) else j for j in jobs]
     names = [j.name for j in jobs]
     if len(set(names)) != len(names):
@@ -836,7 +865,10 @@ def simulate_server(
         arb.charge(js, cost, t_end)
         events.append(ServerTaskEvent(
             jname, js.job.tenant, st.name, tid, s, z, w, t_acc, t_end,
-            False, js.boosted))
+            False, js.boosted, wait))
+        if traced:
+            tracer.record_raw("exec", jname, st.name, tid, w, t_acc, t_end,
+                              0, wait)
         busy[w] += cost
         job_left[jname] -= 1
         remaining -= 1
@@ -856,6 +888,10 @@ def simulate_server(
             tenant_service.get(js.job.tenant, 0.0) + js.service)
     finishes = {js.job.name: float(js.finish) for js in states}
     arrivals = [js.arrival for js in states]
+    preemptions = list(getattr(arb, "preemption_log", []))
+    if traced:
+        for p in preemptions:
+            tracer.mark(p.kind, p.t, p.job, detail=p.reason)
     return ServerSimResult(
         makespan=(max(finishes.values()) - min(arrivals)) if states else 0.0,
         job_finish=finishes,
@@ -863,4 +899,4 @@ def simulate_server(
                      zip([js.job.name for js in states], arrivals)},
         tenant_service=tenant_service, per_worker_busy=busy,
         events=events, queue_wait=queue_wait,
-        preemptions=list(getattr(arb, "preemption_log", [])))
+        preemptions=preemptions)

@@ -224,6 +224,7 @@ def dag_walk(
     interpret: bool = True,
     table_key: tuple | None = None,
     _dev_table: jax.Array | None = None,
+    stamp: bool = False,
 ) -> dict[str, jax.Array]:
     """Drain one shard's super-table in a single Pallas launch.
 
@@ -235,6 +236,13 @@ def dag_walk(
     device-resident across launches (see ``_device_table``);
     ``_dev_table`` is a pre-transferred device array from
     ``dag_walk_sharded``'s double-buffered prefetch.
+
+    ``stamp=True`` adds an ``(n_slots, 4) int32`` event buffer output —
+    each slot's grid step writes ``(stage_id, start, size, slot)`` into
+    its own row (idempotent across inner steps, so the walk's own cost
+    is one int32 row store per slot). The buffer is read back post-walk
+    by ``core.device_schedule.device_walk_spans`` and turned into tracer
+    spans; the return becomes ``({stage: out}, stamps)``.
     """
     table = np.ascontiguousarray(np.asarray(table, dtype=np.int32))
     if table.ndim != 2 or table.shape[1] != 3:
@@ -245,7 +253,10 @@ def dag_walk(
     n_slots = len(table)
     n_inner = max(s.inner for s in stages)
     if n_slots == 0:
-        return {s.name: jnp.zeros(s.out_shape, s.out_dtype) for s in stages}
+        empty = {s.name: jnp.zeros(s.out_shape, s.out_dtype) for s in stages}
+        if stamp:
+            return empty, np.zeros((0, 4), dtype=np.int32)
+        return empty
 
     in_specs = []
     for op in operands:
@@ -257,6 +268,9 @@ def dag_walk(
         block, kinds = _out_spec(s, tile)
         out_specs.append(pl.BlockSpec(block, _index_map(block, kinds, s.out_shape)))
         out_shapes.append(jax.ShapeDtypeStruct(tuple(s.out_shape), s.out_dtype))
+    if stamp:
+        out_specs.append(pl.BlockSpec((1, 4), lambda i, j, tbl: (i, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((n_slots, 4), jnp.int32))
 
     n_ops = len(operands)
 
@@ -274,6 +288,15 @@ def dag_walk(
             for s in stages:
                 if s.combine == "sum":
                     outs[s.name][...] = jnp.zeros(s.out_shape, s.out_dtype)
+
+        if stamp:
+            # per-slot event stamp: idempotent across inner steps (each
+            # writes the same row), read back post-walk as tracer spans
+            st_ref = refs[n_ops + len(stages)]
+            st_ref[0, 0] = sid
+            st_ref[0, 1] = start
+            st_ref[0, 2] = size
+            st_ref[0, 3] = i
 
         for k, s in enumerate(stages):
             def run(s=s):
@@ -297,7 +320,10 @@ def dag_walk(
         out_shape=out_shapes,
         interpret=interpret,
     )(tbl_dev, *[values[op.name] for op in operands])
-    return {s.name: o for s, o in zip(stages, out)}
+    named = {s.name: o for s, o in zip(stages, out)}
+    if stamp:
+        return named, np.asarray(out[len(stages)])
+    return named
 
 
 def dag_walk_stagewise(

@@ -51,6 +51,34 @@ def _pipeline_submissions(scale: int = 11):
     ]
 
 
+def _telemetry(args):
+    """Build the (tracer, metrics) pair requested by ``--trace-out`` /
+    ``--metrics-out``; either is None when its flag is absent, which the
+    runtimes treat as the zero-overhead NullTracer path (docs/OBSERVABILITY.md)."""
+    from ..core import MetricsRegistry, Tracer
+
+    tracer = Tracer() if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics_out else None
+    return tracer, metrics
+
+
+def _dump_telemetry(args, tracer, metrics) -> None:
+    """Write the Chrome trace and the metrics snapshot (JSON + a ``.prom``
+    Prometheus-text sibling) after a traced run."""
+    from pathlib import Path
+
+    if tracer is not None:
+        tracer.write_chrome_trace(args.trace_out)
+        print(f"[serve] trace: {len(tracer)} events -> {args.trace_out}",
+              flush=True)
+    if metrics is not None:
+        out = Path(args.metrics_out)
+        out.write_text(metrics.to_json() + "\n")
+        prom = out.with_suffix(".prom")
+        prom.write_text(metrics.to_prometheus())
+        print(f"[serve] metrics -> {out} (+ {prom})", flush=True)
+
+
 def _make_serving_arbiter(spec: str, args):
     """Resolve an --arbiter spec; ``preemptive`` wraps weighted-fair with
     the pool size and slack from the command line (DESIGN.md §15)."""
@@ -64,15 +92,20 @@ def _make_serving_arbiter(spec: str, args):
 
 def serve_pipelines(args) -> None:
     """Serve the mixed submission set on one shared pool per arbiter."""
-    from ..core import PipelineServer, make
+    from ..core import PipelineServer, analyze_critical_path, make
 
     cfg = make("config", args.config, n_workers=args.workers)
     arbiters = (("fifo", "priority", "fair", "preemptive") if args.compare
                 else (args.arbiter,))
+    tracer = metrics = None
     for arb in arbiters:
+        # fresh tracer per arbiter: job names repeat across compare runs and
+        # would otherwise merge into one misleading job hull
+        tracer, metrics = _telemetry(args)
         subs = _pipeline_submissions()
         tenant_of = {s.name: s.tenant for s in subs}
-        server = PipelineServer(cfg, arbiter=_make_serving_arbiter(arb, args))
+        server = PipelineServer(cfg, arbiter=_make_serving_arbiter(arb, args),
+                                tracer=tracer, metrics=metrics)
         for s in subs:
             server.submit(s)
         res = server.serve()
@@ -89,6 +122,10 @@ def serve_pipelines(args) -> None:
                   f"latency={r.latency_s * 1e3:8.1f}ms "
                   f"service={r.service_s * 1e3:7.1f}ms "
                   f"tasks={r.n_tasks}{dl}", flush=True)
+        if tracer is not None:
+            cp = analyze_critical_path(tracer, makespan=res.makespan_s)
+            print(f"  critical path ({arb}): {cp.describe()}", flush=True)
+    _dump_telemetry(args, tracer, metrics)
 
 
 def serve_openloop(args) -> None:
@@ -107,10 +144,12 @@ def serve_openloop(args) -> None:
     kwargs = ({"inner": "fair", "n_workers": args.workers,
                "slack_s": args.slack}
               if args.arbiter == "preemptive" else None)
+    tracer, metrics = _telemetry(args)
     front = replay_open_loop(trace, n_workers=args.workers,
                              arbiter=args.arbiter, arbiter_kwargs=kwargs,
                              admission=adm,
-                             batching=BatchPolicy(2e-3, 8), feedback=fb)
+                             batching=BatchPolicy(2e-3, 8), feedback=fb,
+                             tracer=tracer, metrics=metrics)
     for tag, r in (("fifo baseline", base), ("front door", front)):
         preempt = f" preemptions={len(r.preemptions)}" if r.preemptions else ""
         print(f"[serve:openloop] {tag}: p50={r.latency_percentile(50) * 1e3:.2f}ms "
@@ -118,6 +157,7 @@ def serve_openloop(args) -> None:
               f"p99.9={r.latency_percentile(99.9) * 1e3:.2f}ms "
               f"hit={r.deadline_hit_rate():.3f} shed={r.shed_rate:.3f} "
               f"batches={r.n_batches}{preempt}", flush=True)
+    _dump_telemetry(args, tracer, metrics)
 
 
 def serve_lm(args) -> None:
@@ -193,6 +233,12 @@ def main() -> None:
                     help="shared pool size for --mode pipelines")
     ap.add_argument("--compare", action="store_true",
                     help="pipelines mode: run all four arbiters")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="write a Chrome/Perfetto trace of the run "
+                         "(pipelines/openloop modes; docs/OBSERVABILITY.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="METRICS.json",
+                    help="write a metrics snapshot as JSON plus a .prom "
+                         "Prometheus-text sibling (pipelines/openloop modes)")
     args = ap.parse_args()
     if args.mode == "pipelines":
         serve_pipelines(args)

@@ -47,6 +47,11 @@ GOOD_ROWS = {
                                  "lower_hits=5 lower_misses=1 table_hits=5 "
                                  "table_misses=1 jobs=6 hit_margin=33.33% "
                                  "equal=1"),
+    "telemetry_overhead": (84.4,
+                           "traced=10974.0us base=10853.0us chunks=130 "
+                           "spans=130 reps=5 record_ns=207 "
+                           "overhead_pct=0.248% overhead_margin5=4.75% "
+                           "equal=1 recon=1"),
 }
 
 
@@ -261,6 +266,18 @@ def test_openloop_gate_requires_all_three_patterns(tmp_path):
                     "p999_gain=85.65% hit_gain=35.34%"):
         rows = dict(GOOD_ROWS)
         rows["pipeline_server_openloop"] = (5369.2, derived)
+        assert cg.main([write_csv(tmp_path, rows)]) == 1, derived
+
+
+def test_telemetry_gate_requires_all_three_patterns(tmp_path):
+    """overhead_margin5 / equal / recon must all be present and
+    non-negative — tracing must stay cheap AND honest."""
+    for derived in ("overhead_margin5=-0.10% equal=1 recon=1",
+                    "overhead_margin5=4.75% equal=-1 recon=1",
+                    "overhead_margin5=4.75% equal=1 recon=-1",
+                    "overhead_margin5=4.75% equal=1"):
+        rows = dict(GOOD_ROWS)
+        rows["telemetry_overhead"] = (84.4, derived)
         assert cg.main([write_csv(tmp_path, rows)]) == 1, derived
 
 

@@ -1,0 +1,459 @@
+"""Unified scheduler telemetry tests (core/telemetry.py, DESIGN.md §18).
+
+The span invariants, property-tested over random DAG shapes x techniques
+x queue layouts x queue implementations:
+
+  * every executed chunk gets exactly ONE exec span, identity-matched
+    (stage, chunk) against the independent TaskEvent timeline;
+  * nesting holds — every exec span (including its preceding queue wait)
+    sits inside its synthesized stage span, and every span inside its
+    job span (no span outlives its job);
+  * the Chrome-trace export of every run passes schema validation.
+
+Plus: critical-path attribution telescoping to the measured makespan and
+reconciling against DagStats on BOTH the real pool and simulate_dag
+replays; the slot-vs-deque queue-wait differential (the wait_s
+reconciliation fix); the uniform TransferEvent/PreemptionEvent result
+surfaces; the device-walk stamp buffer -> span conversion; and the
+MetricsRegistry (memoization, Prometheus exposition, drain-time
+collectors over the queues' uniform ``counters()`` API).
+"""
+
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DEP_ELEMENTWISE,
+    DEP_FULL,
+    NULL_TRACER,
+    HeteroExecutor,
+    MetricsRegistry,
+    NullTracer,
+    PipelineDAG,
+    PipelineExecutor,
+    PipelineServer,
+    PreemptiveRunner,
+    SchedulerConfig,
+    Stage,
+    StageDep,
+    Submission,
+    Tracer,
+    analyze_critical_path,
+    as_tracer,
+    collect_queue_metrics,
+    device_walk_spans,
+    simulate_dag,
+    validate_chrome_trace,
+)
+from repro.core.queues import (
+    CentralizedQueue,
+    DistributedQueues,
+    SlotCentralizedQueue,
+    SlotDistributedQueues,
+)
+from repro.core.telemetry import F_DEVICE, WORK_KINDS
+
+TECHS = ["STATIC", "SS", "MFSC", "GSS", "FAC2", "TSS"]
+LAYOUTS = ["CENTRALIZED", "PERCORE", "PERGROUP"]
+IMPLS = ["deque", "slot"]
+EPS = 1e-9
+
+
+def _chain_dag(n, n_stages, full_deps):
+    """A linear pipeline: concat source then n_stages-1 row-wise consumers,
+    each edge elementwise or full per ``full_deps``."""
+    stages = [Stage("s0", n,
+                    lambda i, s, z: np.arange(s, s + z, dtype=np.int64),
+                    combine="concat")]
+    for k in range(1, n_stages):
+        prev = f"s{k - 1}"
+        kind = DEP_FULL if full_deps[k - 1] else DEP_ELEMENTWISE
+        if kind == DEP_ELEMENTWISE:
+            fn = (lambda i, s, z, p=prev: i[p][s:s + z] + 1)
+        else:
+            fn = (lambda i, s, z, p=prev: i[p][:1] + np.arange(z))
+        stages.append(Stage(f"s{k}", n, fn, combine="concat",
+                            deps=(StageDep(prev, kind),)))
+    return PipelineDAG(stages)
+
+
+def _costs(dag, seed=0):
+    rng = np.random.default_rng(seed)
+    return {name: rng.uniform(1.0, 3.0, dag.stages[name].n_rows)
+            for name in dag.order}
+
+
+def _check_invariants(tracer, events):
+    """The §18 span invariants shared by the host and simulated runs."""
+    spans = tracer.spans()
+    execs = [s for s in spans if s.kind == "exec"]
+    # exactly one exec span per executed chunk, identity-matched
+    want = sorted((e.stage, e.task_id) for e in events)
+    got = sorted((s.stage, s.chunk) for s in execs)
+    assert got == want
+    stage_spans = {(s.job, s.stage): s for s in spans if s.kind == "stage"}
+    job_spans = {s.job: s for s in spans if s.kind == "job"}
+    for s in execs:
+        parent = stage_spans[(s.job, s.stage)]
+        assert parent.t0 - EPS <= s.t0 - s.wait_s
+        assert s.t1 <= parent.t1 + EPS
+    for s in spans:
+        j = job_spans[s.job]
+        assert j.t0 - EPS <= s.t0 - s.wait_s or s.kind not in WORK_KINDS
+        assert s.t1 <= j.t1 + EPS, f"{s.kind} span outlives job {s.job}"
+    for (job, _), p in stage_spans.items():
+        j = job_spans[job]
+        assert j.t0 - EPS <= p.t0 and p.t1 <= j.t1 + EPS
+    return execs
+
+
+# ---------------------------------------------------------------------------
+# span invariants, real pool
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(8, 48), n_stages=st.integers(2, 4),
+       full_a=st.booleans(), full_b=st.booleans(), full_c=st.booleans(),
+       tech=st.sampled_from(TECHS), layout=st.sampled_from(LAYOUTS),
+       impl=st.sampled_from(IMPLS), workers=st.integers(1, 4))
+def test_span_invariants_host_pool(n, n_stages, full_a, full_b, full_c,
+                                   tech, layout, impl, workers):
+    dag = _chain_dag(n, n_stages, [full_a, full_b, full_c])
+    cfg = SchedulerConfig(technique=tech, queue_layout=layout,
+                          n_workers=workers, queue_impl=impl)
+    tracer = Tracer(job="prop")
+    res = PipelineExecutor(dag, cfg, tracer=tracer).run()
+    execs = _check_invariants(tracer, list(res.events))
+    assert all(s.job == "prop" for s in execs)
+    assert validate_chrome_trace(tracer.to_chrome_trace()) == []
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(16, 64), tech=st.sampled_from(TECHS),
+       layout=st.sampled_from(LAYOUTS), workers=st.integers(2, 6),
+       full_dep=st.booleans())
+def test_span_invariants_simulated(n, tech, layout, workers, full_dep):
+    dag = _chain_dag(n, 3, [full_dep, not full_dep])
+    tracer = Tracer(job="sim")
+    sim = simulate_dag(dag, _costs(dag), per_stage=None, n_workers=workers,
+                       tracer=tracer)
+    spans = tracer.spans()
+    execs = [s for s in spans if s.kind == "exec"]
+    assert len(execs) == sim.stats.total_chunks
+    # virtual time: chunk bodies are exact, so the critical path telescopes
+    rep = analyze_critical_path(tracer, makespan=sim.makespan)
+    rep.reconcile(sim.stats, sim.makespan, rel_tol=1e-6)
+    assert validate_chrome_trace(tracer.to_chrome_trace()) == []
+
+
+def test_chrome_trace_schema_fields():
+    dag = _chain_dag(16, 2, [False])
+    tracer = Tracer(job="schema")
+    PipelineExecutor(dag, SchedulerConfig(technique="GSS", n_workers=2),
+                     tracer=tracer).run()
+    obj = tracer.to_chrome_trace()
+    assert validate_chrome_trace(obj) == []
+    # round-trips through JSON and keeps both processes + metadata rows
+    obj2 = json.loads(json.dumps(obj))
+    evs = obj2["traceEvents"]
+    pids = {e["pid"] for e in evs}
+    assert pids == {1, 2}
+    names = {e["args"].get("name") for e in evs if e["ph"] == "M"}
+    assert {"pool", "jobs"} <= names
+    cats = {e.get("cat") for e in evs if e["ph"] != "M"}
+    assert "exec" in cats or "steal" in cats
+    assert "stage" in cats and "job" in cats
+    # validator actually rejects malformed events
+    assert validate_chrome_trace({"traceEvents": [{"ph": "X", "pid": 1,
+                                                   "tid": 0, "name": "x",
+                                                   "ts": 0.0, "dur": -1}]})
+    assert validate_chrome_trace({}) == ["traceEvents missing or not a list"]
+
+
+def test_null_tracer_is_inert():
+    nt = NullTracer()
+    assert not nt.enabled
+    nt.record_raw("exec", "j", "s", 0, 0, 0.0, 1.0)
+    nt.mark("shed", 0.5)
+    nt.extend_raw([("exec", "j", "s", 0, 0, 0.0, 1.0, 0, 0.0, "")])
+    assert len(nt) == 0 and nt.spans() == []
+    assert as_tracer(None) is NULL_TRACER
+    t = Tracer()
+    assert as_tracer(t) is t
+
+
+# ---------------------------------------------------------------------------
+# critical-path attribution
+# ---------------------------------------------------------------------------
+
+def test_critical_path_reconciles_real_pool():
+    dag = _chain_dag(64, 3, [False, True])
+    tracer = Tracer(job="cp")
+    res = PipelineExecutor(dag, SchedulerConfig(
+        technique="GSS", queue_layout="PERCORE", n_workers=4),
+        tracer=tracer).run()
+    rep = analyze_critical_path(tracer, makespan=res.wall_time_s)
+    # sums to the measured makespan and never attributes more exec time
+    # to a stage than the independent DagStats accounting measured
+    rep.reconcile(res.stats, res.wall_time_s, rel_tol=0.05, abs_tol=1e-6)
+    assert rep.breakdown["exec"] > 0
+    assert rep.path, "walk must traverse at least one work span"
+    assert "exec=" in rep.describe()
+
+
+def test_critical_path_empty_and_synthetic():
+    rep = analyze_critical_path(Tracer(), makespan=1.0)
+    assert rep.sched_overhead_s == {"_idle": 1.0}
+    assert rep.total == pytest.approx(1.0)
+    # hand-built timeline: exec 0-1 on lane 0, gap 1-2 (wait 0.6),
+    # exec 2-3; transfer 3-3.5; makespan 4 -> 0.5 drain
+    t = Tracer(job="synth")
+    t.record_raw("exec", "synth", "a", 0, 0, 0.0, 1.0)
+    t.record_raw("exec", "synth", "b", 0, 0, 2.0, 3.0, 0, 0.6)
+    t.record_raw("transfer", "synth", "b", 1, 0, 3.0, 3.5)
+    rep = analyze_critical_path(t, makespan=4.0)
+    b = rep.breakdown
+    assert b["exec"] == pytest.approx(2.0)
+    assert b["transfer"] == pytest.approx(0.5)
+    assert b["queue_wait"] == pytest.approx(0.6)
+    assert b["sched_overhead"] == pytest.approx(0.9)  # 0.4 gap + 0.5 drain
+    assert rep.total == pytest.approx(4.0)
+    assert rep.sched_overhead_s["_drain"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# slot-vs-deque queue-wait differential (the wait_s reconciliation fix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_queue_wait_populated_per_impl(impl):
+    dag = _chain_dag(256, 2, [False])
+    cfg = SchedulerConfig(technique="SS", queue_layout="CENTRALIZED",
+                          n_workers=4, queue_impl=impl)
+    res = PipelineExecutor(dag, cfg).run()
+    waits = [e.wait_s for e in res.events]
+    assert all(w >= 0.0 for w in waits)
+    assert any(w > 0.0 for w in waits), (
+        f"{impl}: no queue wait measured across {len(waits)} chunks")
+    # DagResult.stats folds the same numbers — no reconciliation gap
+    st_ = res.stats
+    assert st_.total_queue_wait_s == pytest.approx(sum(waits), rel=1e-9)
+
+
+def test_slot_vs_deque_differential_stats():
+    """The slot path used to drop queue waits entirely; both impls must
+    now produce the same chunk accounting (the schedule is deterministic)
+    with wait_s populated and internally consistent."""
+    dag = _chain_dag(96, 3, [False, False])
+    per = {}
+    for impl in IMPLS:
+        cfg = SchedulerConfig(technique="GSS", queue_layout="PERCORE",
+                              n_workers=4, queue_impl=impl)
+        res = PipelineExecutor(dag, cfg).run()
+        st_ = res.stats
+        assert st_.total_queue_wait_s > 0.0, f"{impl}: waits not populated"
+        assert st_.total_queue_wait_s == pytest.approx(
+            sum(e.wait_s for e in res.events), rel=1e-9)
+        per[impl] = st_
+    # same technique -> same chunk plan, whichever queue holds it
+    assert per["deque"].chunks == per["slot"].chunks
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_scheduled_executor_queue_wait_stat(impl):
+    from repro.core import ScheduledExecutor, tasks_from_schedule
+    cfg = SchedulerConfig(technique="SS", queue_layout="CENTRALIZED",
+                          n_workers=4, queue_impl=impl)
+    tasks = tasks_from_schedule([(i, 1) for i in range(0, 128)],
+                                lambda s, z: float(s))
+    _, st_ = ScheduledExecutor(cfg).run(tasks)
+    assert st_.queue_wait_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# uniform result surfaces: TransferEvent / PreemptionEvent
+# ---------------------------------------------------------------------------
+
+def test_result_surfaces_are_uniform():
+    dag = _chain_dag(32, 2, [False])
+    cfg = SchedulerConfig(technique="SS", n_workers=2)
+    from repro.core import Placement
+    res = PipelineExecutor(dag, cfg).run()
+    hres = HeteroExecutor(dag, cfg, Placement.all_host(dag.order)).run()
+    _, ck = PreemptiveRunner(dag, cfg, preempt_after=2).run()
+    server = PipelineServer(cfg)
+    server.submit(Submission(dag, "u1"))
+    sres = server.serve()
+    for r in (res, hres, sres):
+        assert isinstance(r.transfer_events, list)
+        assert isinstance(r.preemptions, list)
+        st_ = r.stats
+        # transfers folded into stats uniformly: one count per event
+        assert sum(st_.transfers.values()) == len(r.transfer_events)
+    assert ck is not None and ck.remaining_chunks > 0
+
+
+def test_server_spans_and_preemption_marks():
+    dag = _chain_dag(48, 2, [False])
+    cfg = SchedulerConfig(technique="GSS", n_workers=2)
+    tracer = Tracer()
+    server = PipelineServer(cfg, arbiter="fair", tracer=tracer)
+    for name in ("alpha", "beta"):
+        server.submit(Submission(_chain_dag(48, 2, [False]), name))
+    res = server.serve()
+    spans = tracer.spans()
+    jobs = {s.job for s in spans if s.kind == "exec"}
+    assert jobs == {"alpha", "beta"}
+    _check_invariants(tracer, list(res.events))
+    rep = analyze_critical_path(tracer, makespan=res.makespan_s)
+    rep.reconcile(res.stats, res.makespan_s, rel_tol=0.05, abs_tol=1e-6)
+
+
+def test_preemptive_runner_marks_checkpoint():
+    dag = _chain_dag(32, 2, [False])
+    cfg = SchedulerConfig(technique="SS", n_workers=1)
+    tracer = Tracer()
+    _, ck = PreemptiveRunner(dag, cfg, preempt_after=2, job="pj",
+                             tracer=tracer).run()
+    kinds = {s.kind for s in tracer.spans()}
+    assert "checkpoint" in kinds
+    from repro.core import resume_on_host
+    resume_on_host(ck, dag, cfg, tracer=tracer)
+    kinds = {s.kind for s in tracer.spans()}
+    assert "resume" in kinds
+    assert validate_chrome_trace(tracer.to_chrome_trace()) == []
+
+
+# ---------------------------------------------------------------------------
+# device-walk stamp buffer -> spans
+# ---------------------------------------------------------------------------
+
+def test_device_walk_spans_from_stamps():
+    stamps = np.array([[0, 0, 8, 0], [0, 8, 8, 1], [1, 0, 16, 2],
+                       [1, 0, 0, 3]], dtype=np.int32)  # last row: padding
+    tracer = Tracer(job="dev")
+    n = device_walk_spans(stamps, ["a", "b"], tracer, lane=5, job="dev",
+                          row_costs={"a": np.full(16, 2.0),
+                                     "b": np.ones(16)})
+    assert n == 3
+    execs = [s for s in tracer.spans() if s.kind == "exec"]
+    assert len(execs) == 3
+    assert all(s.device and s.lane == 5 for s in execs)
+    assert [s.stage for s in execs] == ["a", "a", "b"]
+    # virtual clock: slot durations follow the row costs, back to back
+    assert execs[0].t0 == pytest.approx(0.0)
+    assert execs[0].t1 == pytest.approx(16.0)  # 8 rows x cost 2
+    assert execs[2].t1 == pytest.approx(48.0)
+    assert device_walk_spans(stamps, ["a", "b"], NULL_TRACER) == 0
+    assert validate_chrome_trace(tracer.to_chrome_trace()) == []
+
+
+def test_dag_walk_stamp_buffer():
+    from repro.core import build_dag_tables
+    from repro.kernels.dag_walk import dag_walk
+    from repro.vee.apps import linreg_device_lowering
+
+    low = linreg_device_lowering(128, 5, tile=32)
+    ddt = build_dag_tables(low.dag, 1, "SS", n_shards=1, n_workers=2)
+    rows = ddt.tables[0].copy()
+    rows[:, 1:] *= low.tile
+    plain = dag_walk(low.stages, low.operands, low.values, rows, low.tile)
+    out, stamps = dag_walk(low.stages, low.operands, low.values, rows,
+                           low.tile, stamp=True)
+    # stamping is read-only: outputs bit-equal to the unstamped walk
+    for k in plain:
+        assert np.array_equal(np.asarray(plain[k]), np.asarray(out[k]))
+    stamps = np.asarray(stamps)
+    assert stamps.shape == (len(rows), 4)
+    live = stamps[stamps[:, 2] > 0]
+    assert np.array_equal(live[:, :3], rows[rows[:, 2] > 0])
+    # slot ids are the walk order
+    assert np.array_equal(live[:, 3], np.flatnonzero(rows[:, 2] > 0))
+    tracer = Tracer(job="walk")
+    n = device_walk_spans(live, [s.name for s in low.stages], tracer, lane=9)
+    assert n == len(live)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_memoization_and_snapshot():
+    reg = MetricsRegistry()
+    c = reg.counter("hits", "cache hits")
+    c.inc()
+    reg.counter("hits").inc(2)
+    assert reg.counter("hits") is c and c.value == 3
+    # distinct labels -> distinct series
+    reg.counter("hits", labels={"cache": "a"}).inc()
+    reg.gauge("depth").set(7)
+    h = reg.histogram("lat", labels={"tenant": "t"})
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["counters"]["hits"] == 3
+    assert snap["counters"]['hits{cache="a"}'] == 1
+    assert snap["gauges"]["depth"] == 7
+    s = snap["histograms"]['lat{tenant="t"}']
+    assert s["count"] == 4 and s["sum"] == pytest.approx(10.0)
+    assert s["min"] == 1.0 and s["max"] == 4.0
+    json.loads(reg.to_json())  # JSON-clean
+
+
+def test_prometheus_exposition():
+    reg = MetricsRegistry()
+    reg.counter("sched_steals", "work steals").inc(5)
+    reg.gauge("sched_queue_depth", labels={"q": "0"}).set(2)
+    reg.histogram("sched_job_latency_seconds").observe(0.25)
+    text = reg.to_prometheus()
+    assert "# TYPE sched_steals counter" in text
+    assert "# HELP sched_steals work steals" in text
+    assert "sched_steals 5.0" in text
+    assert 'sched_queue_depth{q="0"} 2.0' in text
+    assert "sched_job_latency_seconds_count 1" in text
+    assert 'quantile="0.99"' in text
+
+
+@pytest.mark.parametrize("qcls,dist", [
+    (CentralizedQueue, False), (SlotCentralizedQueue, False),
+    (DistributedQueues, True), (SlotDistributedQueues, True)])
+def test_queue_counters_uniform_api(qcls, dist):
+    from repro.core import RangeTask, make_partitioner
+    tasks = [RangeTask(i, i, 1) for i in range(6)]
+    if qcls is CentralizedQueue:
+        q = qcls(tasks, make_partitioner("SS", len(tasks), 2))
+    else:
+        q = qcls(tasks, "SS", 2)
+    q.pop_local(0) if dist else q.pop()
+    c = q.counters()
+    assert c["depth"] == 5
+    assert c["pops"] == 1
+    if dist:
+        assert {"steals", "failed_steals"} <= set(c)
+    else:
+        assert "contended_pops" in c
+    reg = MetricsRegistry()
+    collect_queue_metrics(reg, c, labels={"impl": qcls.__name__})
+    snap = reg.snapshot()
+    key = f'sched_queue_depth{{impl="{qcls.__name__}"}}'
+    assert snap["gauges"][key] == 5
+
+
+def test_server_metrics_collection():
+    from repro.core import collect_server_metrics
+    dag = _chain_dag(32, 2, [False])
+    cfg = SchedulerConfig(technique="GSS", n_workers=2)
+    server = PipelineServer(cfg)
+    server.submit(Submission(dag, "m1", tenant="t1"))
+    res = server.serve()
+    reg = MetricsRegistry()
+    collect_server_metrics(reg, res)
+    snap = reg.snapshot()
+    assert snap["counters"]["sched_chunks"] == len(list(res.events))
+    assert snap["histograms"]["sched_job_latency_seconds"]["count"] == 1
+    assert any(k.startswith("sched_tenant_service_seconds")
+               for k in snap["counters"])
